@@ -1,0 +1,47 @@
+"""Paper Fig 1 reproduction: the array-size trade-off that motivates HURRY.
+
+(a) unit array size vs ReRAM spatial utilization (paper: 99% @128 -> 57%
+    @512 on AlexNet under ISAAC mapping);
+(b) ADC power/area overhead of many small arrays vs one large one
+    (paper: 16x 128^2 arrays with 7-bit ADCs = 3.4x power / 3.7x area of
+    one 512^2 array with a 9-bit ADC).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import WORKLOADS
+from repro.core.baselines import simulate_isaac
+from repro.core.energy import EnergyModel, adc_bits_for
+from repro.core.area import AreaModel
+
+
+def fig1a_spatial_vs_array_size():
+    rows = []
+    for net in ("alexnet", "vgg16", "resnet18"):
+        layers = WORKLOADS[net]()
+        t0 = time.perf_counter()
+        for s in (128, 256, 512):
+            r = simulate_isaac(layers, s)
+            us = (time.perf_counter() - t0) * 1e6
+            rows.append((f"fig1a_spatial_util/{net}/array_{s}", us,
+                         r.spatial_utilization))
+    return rows
+
+
+def fig1b_adc_overhead():
+    """16x 128^2 w/ 7-bit ADC vs 1x 512^2 w/ 9-bit (1-bit cells)."""
+    em, am = EnergyModel(), AreaModel()
+    b128 = adc_bits_for(128, 1)     # -> 7 (paper Fig 1b)
+    b512 = adc_bits_for(512, 1)     # -> 9
+    power_ratio = (16 * em.adc_cycle_pj(b128)) / em.adc_cycle_pj(b512)
+    area_ratio = (16 * am.adc_mm2(b128)) / am.adc_mm2(b512)
+    return [
+        ("fig1b_adc_power_ratio/16x128_vs_1x512", 0.0, power_ratio),
+        ("fig1b_adc_area_ratio/16x128_vs_1x512", 0.0, area_ratio),
+        # paper states 3.4x power and 3.7x area
+    ]
+
+
+ALL = [fig1a_spatial_vs_array_size, fig1b_adc_overhead]

@@ -1,0 +1,58 @@
+"""Pallas kernel microbenches (interpret mode on CPU; derived = rel-err
+vs oracle, proving the kernels stay correct at bench shapes)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _t(fn):
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(fn())
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    x = jax.random.randint(key, (128, 512), -128, 128).astype(jnp.int8)
+    w = jax.random.randint(jax.random.PRNGKey(1), (512, 256),
+                           -128, 128).astype(jnp.int8)
+    y, us = _t(lambda: ops.crossbar_matmul_int8(x, w, rows=256))
+    err = float(np.abs(np.asarray(y)
+                       - np.asarray(ref.crossbar_gemm_ref(x, w, rows=256))).max())
+    rows.append(("kernels/crossbar_gemm/128x512x256", us, err))
+
+    q = jax.random.normal(key, (1, 512, 4, 64), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 512, 4, 64), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(3), (1, 512, 4, 64), jnp.float32)
+    o, us = _t(lambda: ops.attention(q, k, v, causal=True))
+    rel = float(np.abs(np.asarray(o) - np.asarray(
+        ref.flash_attention_ref(q, k, v, causal=True))).max())
+    rows.append(("kernels/flash_attention/1x512x4x64", us, rel))
+
+    x2 = jax.random.normal(key, (256, 512), jnp.float32)
+    w2 = jax.random.normal(jax.random.PRNGKey(4), (512, 256), jnp.float32) * .05
+    b2 = jnp.zeros((256,), jnp.float32)
+    y2, us = _t(lambda: ops.linear_fused(x2, w2, b2, act="silu"))
+    rel = float(np.abs(np.asarray(y2) - np.asarray(
+        ref.fused_gemm_epilogue_ref(x2, w2, b2, act="silu"))).max())
+    rows.append(("kernels/fused_gemm_epilogue/256x512x256", us, rel))
+
+    sizes = [200, 56, 300, 100]
+    wg = jax.random.normal(jax.random.PRNGKey(5), (4, 128, 256),
+                           jnp.float32) * 0.1
+    xg = jax.random.normal(jax.random.PRNGKey(6), (sum(sizes), 128),
+                           jnp.float32)
+    yg, us = _t(lambda: ops.grouped_gemm(xg, wg, sizes))
+    rel = float(np.abs(np.asarray(yg) - np.asarray(
+        ref.packed_gemm_ref(xg, wg, jnp.array(sizes)))).max())
+    rows.append(("kernels/packed_gemm/4groups", us, rel))
+    return rows

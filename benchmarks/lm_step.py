@@ -1,0 +1,49 @@
+"""LM step wall-time benchmarks on reduced configs (CPU)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve.step import make_decode_step
+from repro.train.optimizer import OptimizerConfig, init_opt_state
+from repro.train.step import make_train_step
+
+
+def run():
+    rows = []
+    for arch in ("internlm2_1_8b", "mixtral_8x22b", "zamba2_2_7b",
+                 "xlstm_1_3b"):
+        cfg = get_config(arch).reduced()
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 64), 0,
+                                    cfg.vocab_size)
+        step = jax.jit(make_train_step(cfg, OptimizerConfig(), remat=False))
+        opt = init_opt_state(params)
+        batch = {"tokens": tokens}
+        p2, o2, m = step(params, opt, batch)          # compile
+        jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        for _ in range(3):
+            p2, o2, m = step(p2, o2, batch)
+        jax.block_until_ready(m["loss"])
+        us = (time.perf_counter() - t0) / 3 * 1e6
+        rows.append((f"lm/train_step/{arch}-reduced", us, float(m["loss"])))
+
+        dec = jax.jit(make_decode_step(cfg))
+        caches = lm.init_caches(cfg, 4, 64)
+        tok = tokens[:, :1]
+        nt, lg, caches = dec(params, tok, caches, jnp.array(0))  # compile
+        jax.block_until_ready(lg)
+        t0 = time.perf_counter()
+        for i in range(5):
+            nt, lg, caches = dec(params, nt, caches, jnp.array(i + 1))
+        jax.block_until_ready(lg)
+        us = (time.perf_counter() - t0) / 5 * 1e6
+        rows.append((f"lm/decode_step/{arch}-reduced", us,
+                     float(jnp.mean(jnp.abs(lg)))))
+    return rows

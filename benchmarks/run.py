@@ -1,0 +1,38 @@
+"""Benchmark aggregator: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Sections:
+  paper_figs    — HURRY Figs 6/7/8 + accuracy (simulator-derived)
+  kernels_bench — Pallas kernel microbenches (interpret mode on CPU)
+  lm_step       — LM train/serve step wall-times on reduced configs
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    rows = []
+    from benchmarks import fig1_tradeoff, paper_figs
+    for fn in fig1_tradeoff.ALL:
+        rows.extend(fn())
+    for fn in paper_figs.ALL:
+        rows.extend(fn())
+    try:
+        from benchmarks import kernels_bench
+        rows.extend(kernels_bench.run())
+    except ImportError:
+        pass
+    try:
+        from benchmarks import lm_step
+        rows.extend(lm_step.run())
+    except ImportError:
+        pass
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived:.6g}")
+
+
+if __name__ == "__main__":
+    main()

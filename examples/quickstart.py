@@ -1,0 +1,45 @@
+"""Quickstart: simulate HURRY vs ISAAC/MISCA on the paper's benchmarks.
+
+    PYTHONPATH=src python examples/quickstart.py [--net alexnet]
+
+Prints the paper's headline comparison (Figs 6-8) for one CNN.
+"""
+
+import argparse
+
+from repro.core import WORKLOADS
+from repro.core.simulator import simulate_hurry
+from repro.core.baselines import simulate_isaac, simulate_misca
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--net", default="alexnet",
+                    choices=["alexnet", "vgg16", "resnet18"])
+    args = ap.parse_args()
+    layers = WORKLOADS[args.net]()
+
+    hurry = simulate_hurry(layers)
+    reports = {"HURRY": hurry}
+    for s in (128, 256, 512):
+        reports[f"ISAAC-{s}"] = simulate_isaac(layers, s)
+    reports["MISCA"] = simulate_misca(layers)
+
+    print(f"=== {args.net} (CIFAR-10, int8, one 16-tile chip) ===")
+    hdr = f"{'arch':10s} {'cycles':>10s} {'energy uJ':>10s} " \
+          f"{'area mm2':>9s} {'spatial':>8s} {'temporal':>9s}"
+    print(hdr)
+    for name, r in reports.items():
+        print(f"{name:10s} {r.throughput_cycles:10.0f} "
+              f"{r.energy_pj / 1e6:10.2f} {r.area_mm2:9.2f} "
+              f"{r.spatial_utilization:8.2%} {r.temporal_utilization:9.2%}")
+    i = reports["ISAAC-128"]
+    print(f"\nHURRY vs ISAAC-128:  speedup {i.throughput_cycles / hurry.throughput_cycles:.2f}x"
+          f"  energy-eff {i.energy_pj / hurry.energy_pj:.2f}x"
+          f"  area-eff {hurry.area_efficiency / i.area_efficiency:.2f}x")
+    print("paper claims:        speedup 1.21-3.35x | energy 2.66-5.72x | "
+          "area 2.98-7.91x (across nets/baselines)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Batched serving example: prefill + continuous greedy decode.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch xlstm_1_3b
+
+Loads a reduced config of the chosen architecture, runs a batch of
+prompts through prefill, then decodes with the per-family O(1) state /
+KV-cache step — demonstrating the same ``serve_step`` the decode dry-run
+cells lower.
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import lm
+from repro.serve.step import make_decode_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2_1_8b", choices=ARCH_IDS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    B = args.batch
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (B, args.prompt_len), 0, cfg.vocab_size)
+    enc = None
+    if cfg.is_encdec:
+        enc = jax.random.normal(jax.random.PRNGKey(2),
+                                (B, cfg.encoder_seq, cfg.d_model)
+                                ).astype(jnp.bfloat16)
+
+    max_len = args.prompt_len + args.new_tokens
+    caches = lm.init_caches(cfg, B, max_len)
+    decode = jax.jit(make_decode_step(cfg))
+
+    # prefill token-by-token (state-correct for every family)
+    tok = prompts[:, :1]
+    t0 = time.time()
+    for i in range(args.prompt_len - 1):
+        _, _, caches = decode(params, tok, caches, jnp.array(i),
+                              encoder_states=enc)
+        tok = prompts[:, i + 1:i + 2]
+    prefill_s = time.time() - t0
+
+    out = [prompts]
+    t0 = time.time()
+    for i in range(args.prompt_len - 1, max_len - 1):
+        tok, _, caches = decode(params, tok, caches, jnp.array(i),
+                                encoder_states=enc)
+        out.append(tok)
+    decode_s = time.time() - t0
+
+    seqs = jnp.concatenate(out, axis=1)
+    print(f"arch={cfg.name} (reduced)  batch={B}")
+    print(f"prefill: {args.prompt_len} tok in {prefill_s*1e3:.0f} ms | "
+          f"decode: {args.new_tokens} tok in {decode_s*1e3:.0f} ms "
+          f"({args.new_tokens*B/max(decode_s,1e-9):.0f} tok/s batch)")
+    print("sample continuation ids:", seqs[0, args.prompt_len:
+                                           args.prompt_len + 12].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,140 @@
+"""Functional model of a ReRAM crossbar performing bit-sliced analog GEMM.
+
+This is the faithful compute model of HURRY's in-situ array (paper §II):
+
+* 1-bit cells (paper §II-B gives three reasons; we model exactly that).
+* Weights (signed int, default 8-bit) are decomposed into two's-complement
+  bit planes; each plane occupies its own column group.
+* Inputs (signed int, default 8-bit) are streamed bit-serially through
+  1-bit DACs (paper: "1-bit DACs").
+* Per (input-bit, weight-bit) combination the bitline integrates the count
+  ``sum_row x_bit[row] * w_bit[row, col]`` — a non-negative integer that a
+  9-bit ADC digitizes.  With a 512-row array and 1-bit cells the count is
+  at most 512, which is why the paper pairs the 512x512 array with a 9-bit
+  ADC: digitization is exact except for the measure-zero all-ones column
+  (clipped by 1 LSB at 512 > 2^9 - 1 = 511).
+* Shift-and-add (SnA) recombines planes: y = sum_ij s_i s_j 2^(i+j) ADC(.)
+  where the MSB plane carries negative weight (two's complement).
+
+Everything is vectorized jnp and jit-friendly.  An optional Gaussian
+read-noise model (thermal + shot + RTN, paper §IV-A1) perturbs the analog
+count before ADC rounding; this drives the accuracy-drop experiment.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CrossbarConfig:
+    """Physical configuration of one unit ReRAM array."""
+
+    rows: int = 512
+    cols: int = 512
+    cell_bits: int = 1          # HURRY uses single-bit cells (paper §II-B)
+    adc_bits: int = 9           # 9-bit ADC for 512 rows (paper §II-A)
+    dac_bits: int = 1           # bit-serial input streaming
+    weight_bits: int = 8        # int8 quantized weights (paper §IV-A2)
+    input_bits: int = 8         # int8 quantized activations
+    # Read-noise model (std of the analog count before ADC rounding).
+    noise_sigma_thermal: float = 0.0
+    noise_sigma_shot: float = 0.0   # scaled by sqrt(count)
+
+    @property
+    def adc_max(self) -> int:
+        return (1 << self.adc_bits) - 1
+
+    @property
+    def weight_planes(self) -> int:
+        # ceil(weight_bits / cell_bits) planes, one column group per plane.
+        return -(-self.weight_bits // self.cell_bits)
+
+    @property
+    def input_phases(self) -> int:
+        # bit-serial phases per input value.
+        return -(-self.input_bits // self.dac_bits)
+
+
+def _twos_complement_planes(v: jnp.ndarray, bits: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Decompose signed ints into (planes, plane_weights).
+
+    planes: (bits, *v.shape) of {0,1}; plane_weights: (bits,) with the MSB
+    negative (two's complement recombination is exact for signed ints).
+    """
+    u = v.astype(jnp.int32) & ((1 << bits) - 1)
+    planes = jnp.stack([(u >> i) & 1 for i in range(bits)]).astype(jnp.int32)
+    w = jnp.array([1 << i for i in range(bits - 1)] + [-(1 << (bits - 1))],
+                  dtype=jnp.int32)
+    return planes, w
+
+
+def _adc(count: jnp.ndarray, cfg: CrossbarConfig,
+         noise_key: Optional[jax.Array]) -> jnp.ndarray:
+    """Digitize an analog bitline count with optional read noise."""
+    if noise_key is not None and (cfg.noise_sigma_thermal > 0 or cfg.noise_sigma_shot > 0):
+        sigma = cfg.noise_sigma_thermal + cfg.noise_sigma_shot * jnp.sqrt(
+            jnp.maximum(count.astype(jnp.float32), 0.0))
+        noisy = count.astype(jnp.float32) + sigma * jax.random.normal(
+            noise_key, count.shape, dtype=jnp.float32)
+        count = jnp.round(noisy).astype(jnp.int32)
+    return jnp.clip(count, 0, cfg.adc_max)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def crossbar_matmul(x: jnp.ndarray, w: jnp.ndarray, cfg: CrossbarConfig = CrossbarConfig(),
+                    noise_key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """Bit-sliced crossbar GEMM: (..., K) x (K, N) -> (..., N) in int32.
+
+    K is split into row-chunks of ``cfg.rows``; partial sums are combined
+    digitally by the shift-and-add units (SnA), exactly as HURRY/ISAAC do
+    across stacked arrays.
+    """
+    assert x.ndim >= 1 and w.ndim == 2
+    K, N = w.shape
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, K)).astype(jnp.int32)
+
+    xp, xs = _twos_complement_planes(x2, cfg.input_bits)     # (Bi, M, K)
+    wp, ws = _twos_complement_planes(w, cfg.weight_bits)     # (Bw, K, N)
+
+    n_chunks = -(-K // cfg.rows)
+    pad = n_chunks * cfg.rows - K
+    if pad:
+        xp = jnp.pad(xp, ((0, 0), (0, 0), (0, pad)))
+        wp = jnp.pad(wp, ((0, 0), (0, pad), (0, 0)))
+    # (Bi, M, C, R) and (Bw, C, R, N)
+    xp = xp.reshape(cfg.input_bits, x2.shape[0], n_chunks, cfg.rows)
+    wp = wp.reshape(cfg.weight_bits, n_chunks, cfg.rows, N)
+
+    # Analog count per (input-bit, weight-bit, chunk): each is one array read.
+    # einsum over the row dimension only -> non-negative counts <= rows.
+    counts = jnp.einsum("imcr,wcrn->iwcmn", xp, wp)
+    counts = _adc(counts, cfg, noise_key)
+    # SnA recombination (digital, exact).
+    scale = (xs[:, None] * ws[None, :]).astype(jnp.int32)    # (Bi, Bw)
+    y = jnp.einsum("iwcmn,iw->mn", counts, scale)
+    return y.reshape(*lead, N)
+
+
+def quantize_symmetric(x: jnp.ndarray, bits: int = 8) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor quantization -> (int values, scale)."""
+    qmax = (1 << (bits - 1)) - 1
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax).astype(jnp.int32)
+    return q, scale
+
+
+def crossbar_linear(x_fp: jnp.ndarray, w_fp: jnp.ndarray,
+                    cfg: CrossbarConfig = CrossbarConfig(),
+                    noise_key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """Quantize fp inputs/weights to int8, run the crossbar, dequantize."""
+    xq, xscale = quantize_symmetric(x_fp, cfg.input_bits)
+    wq, wscale = quantize_symmetric(w_fp, cfg.weight_bits)
+    y = crossbar_matmul(xq, wq, cfg, noise_key)
+    return y.astype(jnp.float32) * (xscale * wscale)

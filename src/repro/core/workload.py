@@ -1,0 +1,176 @@
+"""CNN workload descriptions for the scheduler (paper §IV benchmarks).
+
+These are *scheduling-level* layer specs (the functional JAX models live
+in ``repro.models.cnn``).  Shapes follow the common CIFAR-10 variants of
+AlexNet / VGG-16 / ResNet-18 used by PUMAsim-style evaluations; BatchNorm
+is folded into the preceding conv for inference.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    name: str
+    kind: str                  # conv|fc|relu|maxpool|avgpool|residual|softmax
+    in_ch: int = 0
+    out_ch: int = 0
+    ksize: int = 1
+    stride: int = 1
+    padding: int = 0
+    in_hw: int = 0             # input spatial extent (square)
+    out_hw: int = 0
+    features_in: int = 0       # fc
+    features_out: int = 0
+    residual_from: str = ""
+
+    # -- workload numbers used by mapping/cycle models ----------------------
+    @property
+    def gemm_rows(self) -> int:            # im2col K
+        if self.kind == "conv":
+            return self.in_ch * self.ksize * self.ksize
+        if self.kind == "fc":
+            return self.features_in
+        return 0
+
+    @property
+    def gemm_cols_logical(self) -> int:    # N (before bit-plane expansion)
+        if self.kind == "conv":
+            return self.out_ch
+        if self.kind == "fc":
+            return self.features_out
+        return 0
+
+    @property
+    def n_vectors(self) -> int:            # GEMM passes (im2col columns)
+        if self.kind == "conv":
+            return self.out_hw * self.out_hw
+        if self.kind == "fc":
+            return 1
+        return 0
+
+    @property
+    def n_elements(self) -> int:           # elementwise op count
+        if self.kind in ("relu", "residual"):
+            return self.out_ch * self.out_hw * self.out_hw
+        if self.kind in ("maxpool", "avgpool"):
+            return self.out_ch * self.out_hw * self.out_hw  # windows
+        if self.kind == "softmax":
+            return self.features_out
+        return 0
+
+    @property
+    def out_bytes(self) -> int:
+        if self.kind in ("conv", "relu", "maxpool", "avgpool", "residual"):
+            return self.out_ch * self.out_hw * self.out_hw
+        return self.features_out
+
+
+def _conv(name, in_ch, out_ch, in_hw, k=3, s=1, p=1) -> LayerSpec:
+    out_hw = (in_hw + 2 * p - k) // s + 1
+    return LayerSpec(name, "conv", in_ch=in_ch, out_ch=out_ch, ksize=k,
+                     stride=s, padding=p, in_hw=in_hw, out_hw=out_hw)
+
+
+def _relu(name, prev: LayerSpec) -> LayerSpec:
+    ch = prev.out_ch or prev.features_out
+    return LayerSpec(name, "relu", out_ch=ch, out_hw=prev.out_hw,
+                     features_out=prev.features_out)
+
+
+def _pool(name, prev: LayerSpec, k=2, s=2) -> LayerSpec:
+    out_hw = prev.out_hw // s
+    return LayerSpec(name, "maxpool", out_ch=prev.out_ch, ksize=k, stride=s,
+                     in_hw=prev.out_hw, out_hw=out_hw)
+
+
+def _fc(name, fin, fout) -> LayerSpec:
+    return LayerSpec(name, "fc", features_in=fin, features_out=fout)
+
+
+def alexnet_cifar() -> list[LayerSpec]:
+    ls: list[LayerSpec] = []
+    c1 = _conv("conv1", 3, 64, 32); ls += [c1, _relu("relu1", c1), _pool("pool1", c1)]
+    c2 = _conv("conv2", 64, 192, 16); ls += [c2, _relu("relu2", c2), _pool("pool2", c2)]
+    c3 = _conv("conv3", 192, 384, 8); ls += [c3, _relu("relu3", c3)]
+    c4 = _conv("conv4", 384, 256, 8); ls += [c4, _relu("relu4", c4)]
+    c5 = _conv("conv5", 256, 256, 8); ls += [c5, _relu("relu5", c5), _pool("pool5", c5)]
+    # CIFAR-scale classifier (1024-unit FC variant commonly used for
+    # AlexNet-CIFAR; the ImageNet 4096-unit head would dwarf the convs)
+    ls += [_fc("fc6", 256 * 4 * 4, 1024), LayerSpec("relu6", "relu", features_out=1024)]
+    ls += [_fc("fc7", 1024, 1024), LayerSpec("relu7", "relu", features_out=1024)]
+    ls += [_fc("fc8", 1024, 10), LayerSpec("softmax", "softmax", features_out=10)]
+    return ls
+
+
+def vgg16_cifar() -> list[LayerSpec]:
+    cfg = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+           512, 512, 512, "M", 512, 512, 512, "M"]
+    ls: list[LayerSpec] = []
+    in_ch, hw, i = 3, 32, 1
+    prev = None
+    for v in cfg:
+        if v == "M":
+            ls.append(_pool(f"pool{i}", prev))
+            hw //= 2
+        else:
+            prev = _conv(f"conv{i}", in_ch, v, hw)
+            ls += [prev, _relu(f"relu{i}", prev)]
+            in_ch = v
+            i += 1
+    ls += [_fc("fc1", 512, 512), LayerSpec("relu_fc1", "relu", features_out=512),
+           _fc("fc2", 512, 10), LayerSpec("softmax", "softmax", features_out=10)]
+    return ls
+
+
+def resnet18_cifar() -> list[LayerSpec]:
+    ls: list[LayerSpec] = []
+    c0 = _conv("conv0", 3, 64, 32)
+    ls += [c0, _relu("relu0", c0)]
+    hw, in_ch = 32, 64
+    for stage, (ch, blocks) in enumerate([(64, 2), (128, 2), (256, 2), (512, 2)]):
+        for b in range(blocks):
+            s = 2 if (stage > 0 and b == 0) else 1
+            n = f"s{stage}b{b}"
+            ca = _conv(f"{n}_conv1", in_ch, ch, hw, s=s)
+            hw = ca.out_hw
+            ls += [ca, _relu(f"{n}_relu1", ca)]
+            cb = _conv(f"{n}_conv2", ch, ch, hw)
+            ls += [cb,
+                   LayerSpec(f"{n}_res", "residual", out_ch=ch, out_hw=hw,
+                             residual_from=f"{n}_conv1"),
+                   _relu(f"{n}_relu2", cb)]
+            in_ch = ch
+    ls += [LayerSpec("avgpool", "avgpool", out_ch=512, ksize=4, in_hw=4, out_hw=1),
+           _fc("fc", 512, 10), LayerSpec("softmax", "softmax", features_out=10)]
+    return ls
+
+
+WORKLOADS = {
+    "alexnet": alexnet_cifar,
+    "vgg16": vgg16_cifar,
+    "resnet18": resnet18_cifar,
+}
+
+
+def layer_groups(layers: list[LayerSpec]) -> Iterator[list[LayerSpec]]:
+    """Group each GEMM layer with its trailing elementwise/pool consumers.
+
+    One group becomes one FB chain inside one (set of) array(s) — the unit
+    HURRY schedules (conv + res + relu + pool fused; §III-A).
+    """
+    group: list[LayerSpec] = []
+    for l in layers:
+        if l.kind in ("conv", "fc"):
+            if group:
+                yield group
+            group = [l]
+        else:
+            if not group:
+                group = []
+            group.append(l)
+    if group:
+        yield group

@@ -1,0 +1,81 @@
+"""Bit-sliced crossbar GEMM Pallas kernel — the paper-faithful compute.
+
+Implements HURRY's in-array int8 GEMM semantics on the TPU: two's-
+complement bit planes of the weights x bit-serial input phases, each
+plane-pair's partial count clipped to the ADC range before shift-and-add.
+The hardware adaptation (DESIGN.md §3): analog bitline integration
+becomes an int32 MXU accumulation over {0,1} planes; the row-chunking
+that ReRAM does across stacked arrays becomes the K-grid dimension, and
+ADC saturation applies per chunk exactly as per array.
+
+Grid: (M/bm, N/bn, K/rows) — K blocks are the "arrays"; the 8x8 plane
+loop runs in-register per tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, adc_max: int, n_k: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xu = x_ref[...].astype(jnp.int32) & 0xFF
+    wu = w_ref[...].astype(jnp.int32) & 0xFF
+    acc = acc_ref[...]
+    for i in range(8):
+        xb = ((xu >> i) & 1)
+        sx = -(1 << i) if i == 7 else (1 << i)
+        for j in range(8):
+            wb = ((wu >> j) & 1)
+            sw = -(1 << j) if j == 7 else (1 << j)
+            # analog bitline count for this (input-bit, weight-bit) plane
+            counts = jax.lax.dot_general(
+                xb, wb, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+            counts = jnp.clip(counts, 0, adc_max)      # ADC digitization
+            acc = acc + (sx * sw) * counts             # shift-and-add
+    acc_ref[...] = acc
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("adc_bits", "rows", "block_m",
+                                             "block_n", "interpret"))
+def crossbar_gemm(x: jnp.ndarray, w: jnp.ndarray, *, adc_bits: int = 9,
+                  rows: int = 512, block_m: int = 128, block_n: int = 128,
+                  interpret: bool = False) -> jnp.ndarray:
+    """(M, K) int8 x (K, N) int8 -> (M, N) int32 with HURRY semantics."""
+    assert x.dtype == jnp.int8 and w.dtype == jnp.int8
+    M, K = x.shape
+    Kw, N = w.shape
+    assert K == Kw
+    block_m = min(block_m, M)
+    block_n = min(block_n, N)
+    rows = min(rows, K)
+    assert M % block_m == 0 and N % block_n == 0 and K % rows == 0
+    n_k = K // rows
+    kernel = functools.partial(_kernel, adc_max=(1 << adc_bits) - 1, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(M // block_m, N // block_n, n_k),
+        in_specs=[
+            pl.BlockSpec((block_m, rows), lambda i, j, k: (i, k)),
+            pl.BlockSpec((rows, block_n), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        interpret=interpret,
+    )(x, w)

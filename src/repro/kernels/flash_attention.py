@@ -1,0 +1,114 @@
+"""Fused flash-attention Pallas kernel (paper Eq. 1 on the MXU).
+
+The softmax FB's max-extract + Eq. 1 stabilization IS online softmax:
+running max m, running denominator l, rescaled accumulator acc — scores
+never hit HBM (HURRY's temporal-utilization idea mapped to the TPU memory
+hierarchy: HBM -> VMEM tiles -> MXU).
+
+Grid: (batch*heads, q_blocks); the kernel loops over k blocks with
+``jax.lax.fori_loop``, skipping fully-masked blocks for causal /
+sliding-window layouts.  Block sizes are multiples of 128 to keep the MXU
+systolic array full.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, sm_scale: float,
+                 causal: bool, window: int, block_k: int, seq_k: int):
+    bq = q_ref.shape[0]
+    hd = q_ref.shape[1]
+    qi = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * sm_scale
+    q_start = qi * bq
+
+    nk = seq_k // block_k
+    if causal:
+        # highest k block that any row of this q block can see
+        nk_hi = jnp.minimum((q_start + bq + block_k - 1) // block_k, nk)
+    else:
+        nk_hi = nk
+    if window > 0:
+        lo = jnp.maximum((q_start - window) // block_k, 0)
+    else:
+        lo = 0
+
+    def body(ki, carry):
+        acc, m_prev, l_prev = carry
+        k = jax.lax.dynamic_slice(k_ref[...], (ki * block_k, 0),
+                                  (block_k, hd)).astype(jnp.float32)
+        v = jax.lax.dynamic_slice(v_ref[...], (ki * block_k, 0),
+                                  (block_k, hd)).astype(jnp.float32)
+        s = q @ k.T                                     # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 0)
+        kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (bq, block_k), 1)
+        mask = jnp.ones((bq, block_k), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        # Eq. 1 online update
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_prev * alpha + p.sum(axis=1)
+        acc = acc * alpha[:, None] + p @ v
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((bq, hd), jnp.float32)
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(lo, nk_hi, body, (acc0, m0, l0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q/k/v: (B, S, H, hd) -> (B, S, H, hd).  GQA: expand kv first."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    assert k.shape == (b, sk, h, hd) and v.shape == (b, sk, h, hd)
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+
+    # (B, S, H, hd) -> (B*H, S, hd)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, sk, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, sk, hd)
+
+    grid = (b * h, sq // block_q)
+    kernel = functools.partial(
+        _attn_kernel, sm_scale=1.0 / math.sqrt(hd), causal=causal,
+        window=window, block_k=block_k, seq_k=sk)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, hd), lambda bh, qi: (bh, qi, 0)),
+            pl.BlockSpec((None, sk, hd), lambda bh, qi: (bh, 0, 0)),
+            pl.BlockSpec((None, sk, hd), lambda bh, qi: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, hd), lambda bh, qi: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, hd), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,85 @@
+"""Fused GEMM + bias + activation (+ residual) Pallas kernel.
+
+The TPU mapping of HURRY's merged Conv+Res(+ReLU) functional block
+(paper Fig 4a / §II-C): the epilogue ops execute on the VPU while the
+GEMM tile is still VMEM-resident, so the intermediate never round-trips
+to HBM — the temporal-utilization idea.
+
+Grid: (M/bm, N/bn, K/bk) with a K-innermost accumulation loop; the
+epilogue fires on the last K step.  Block sizes are MXU-aligned
+(multiples of 128 on the matmul dims).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, b_ref, res_ref, o_ref, acc_ref, *,
+            act: str, n_k: int, has_residual: bool):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_k - 1)
+    def _epilogue():
+        y = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        if act == "relu":
+            y = jnp.maximum(y, 0.0)
+        elif act == "silu":
+            y = y * jax.nn.sigmoid(y)
+        elif act == "gelu":
+            y = jax.nn.gelu(y)
+        if has_residual:
+            y = y + res_ref[...].astype(jnp.float32)
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("act", "block_m", "block_n",
+                                             "block_k", "interpret"))
+def fused_gemm_epilogue(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                        residual: jnp.ndarray | None = None, *,
+                        act: str = "silu", block_m: int = 128,
+                        block_n: int = 128, block_k: int = 512,
+                        interpret: bool = False) -> jnp.ndarray:
+    """x (M, K) @ w (K, N) + b (N,) -> act -> (+ residual (M, N))."""
+    M, K = x.shape
+    Kw, N = w.shape
+    assert K == Kw and b.shape == (N,)
+    block_m = min(block_m, M)
+    block_n = min(block_n, N)
+    block_k = min(block_k, K)
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0
+    n_k = K // block_k
+    has_residual = residual is not None
+    res = residual if has_residual else jnp.zeros((1, 1), x.dtype)
+    res_spec = (pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j))
+                if has_residual
+                else pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)))
+
+    kernel = functools.partial(_kernel, act=act, n_k=n_k,
+                               has_residual=has_residual)
+    return pl.pallas_call(
+        kernel,
+        grid=(M // block_m, N // block_n, n_k),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+            pl.BlockSpec((block_n,), lambda i, j, k: (j,)),
+            res_spec,
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, w, b, res)

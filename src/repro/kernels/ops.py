@@ -1,0 +1,63 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels run in interpret mode — the kernel
+body executes in Python for correctness validation; on TPU they compile
+to Mosaic.  ``INTERPRET`` auto-detects the backend.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .crossbar_gemm import crossbar_gemm
+from .flash_attention import flash_attention
+from .fused_gemm_epilogue import fused_gemm_epilogue
+from .packed_gemm import packed_gemm, pad_groups, tile_group_map
+
+INTERPRET = jax.default_backend() == "cpu"
+
+
+def crossbar_matmul_int8(x, w, *, adc_bits: int = 9, rows: int = 512):
+    return crossbar_gemm(x, w, adc_bits=adc_bits, rows=rows,
+                         interpret=INTERPRET)
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              block_q: int = 128, block_k: int = 128):
+    """GQA-aware entry: expands kv heads then calls the fused kernel."""
+    b, s, h, hd = q.shape
+    hkv = k.shape[2]
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           block_q=block_q, block_k=block_k,
+                           interpret=INTERPRET)
+
+
+def linear_fused(x, w, b, residual=None, *, act: str = "silu"):
+    return fused_gemm_epilogue(x, w, b, residual, act=act,
+                               interpret=INTERPRET)
+
+
+def grouped_gemm(x, w, group_sizes, *, block_m: int = 128,
+                 block_n: int = 128):
+    """Convenience wrapper: pad groups, build the tile map, run, unpad."""
+    xp, padded_sizes, row_index = pad_groups(x, group_sizes, block_m)
+    n_tiles = xp.shape[0] // block_m
+    gids = tile_group_map(padded_sizes, block_m, n_tiles)
+    yp = packed_gemm(xp, w, gids, block_m=block_m, block_n=block_n,
+                     interpret=INTERPRET)
+    # unpad back to the original row order
+    import numpy as np
+    idx = np.asarray(row_index)
+    inv = np.full((x.shape[0],), 0, np.int32)
+    inv[idx[idx >= 0]] = np.arange(len(idx))[idx >= 0]
+    return yp[jnp.asarray(inv)]
+
+
+__all__ = ["crossbar_matmul_int8", "attention", "linear_fused",
+           "grouped_gemm", "packed_gemm", "pad_groups", "tile_group_map",
+           "flash_attention", "fused_gemm_epilogue", "crossbar_gemm"]

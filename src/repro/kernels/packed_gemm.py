@@ -1,0 +1,96 @@
+"""Packed (grouped / block-diagonal) GEMM Pallas kernel — the BAS analogue.
+
+HURRY's Block Activation Scheme packs dynamically-sized functional blocks
+into one fixed array.  The TPU analogue: many (m_g, K) x (K, N) problems
+(MoE experts with data-dependent token counts, ragged QKV groups) packed
+into one MXU-aligned kernel.  Tokens arrive sorted by group; a host-side
+plan assigns each M-tile its group id (``tile_groups``), passed through
+scalar prefetch so the weight BlockSpec can select the right expert block
+per tile — MegaBlocks-style, with zero-padding only at group boundaries.
+
+Grid: (M/bm, N/bn); K is kept whole per tile (experts' K fits VMEM at
+MoE sizes; K-splitting would add an accumulator as in
+fused_gemm_epilogue).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(tile_groups_ref, x_ref, w_ref, o_ref):
+    # the weight block for this tile was already selected by the index_map
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...],
+                         preferred_element_type=jnp.float32
+                         ).astype(o_ref.dtype)
+
+
+def tile_group_map(group_sizes, block_m: int, n_tiles: int) -> jnp.ndarray:
+    """Host-side plan: group id per M-tile (tiles aligned to block_m).
+
+    Token rows must be laid out so no tile spans two groups: the caller
+    pads each group to a multiple of block_m (``pad_groups``).
+    """
+    reps = jnp.asarray(group_sizes) // block_m
+    gid = jnp.repeat(jnp.arange(len(group_sizes)), reps,
+                     total_repeat_length=n_tiles)
+    return gid.astype(jnp.int32)
+
+
+def pad_groups(x: jnp.ndarray, group_sizes, block_m: int):
+    """Pad each group's rows to a multiple of block_m (zero rows).
+
+    Returns (x_padded, padded_sizes, row_index) where ``row_index`` maps
+    padded rows back to original rows (-1 for padding).
+    """
+    import numpy as np
+    sizes = np.asarray(group_sizes)
+    padded = ((sizes + block_m - 1) // block_m) * block_m
+    starts = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+    out_rows = int(padded.sum())
+    row_index = np.full((out_rows,), -1, np.int32)
+    o = 0
+    for g, (st, sz, pd) in enumerate(zip(starts, sizes, padded)):
+        row_index[o:o + sz] = np.arange(st, st + sz)
+        o += pd
+    idx = jnp.asarray(row_index)
+    xp = jnp.where(idx[:, None] >= 0, x[jnp.maximum(idx, 0)], 0)
+    return xp.astype(x.dtype), jnp.asarray(padded, jnp.int32), idx
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n",
+                                             "interpret"))
+def packed_gemm(x: jnp.ndarray, w: jnp.ndarray, tile_groups: jnp.ndarray, *,
+                block_m: int = 128, block_n: int = 128,
+                interpret: bool = False) -> jnp.ndarray:
+    """x (Mp, K) group-sorted+padded; w (G, K, N); tile_groups (Mp/bm,)."""
+    M, K = x.shape
+    G, Kw, N = w.shape
+    assert K == Kw
+    block_m = min(block_m, M)
+    block_n = min(block_n, N)
+    assert M % block_m == 0 and N % block_n == 0
+    n_m = M // block_m
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_m, N // block_n),
+        in_specs=[
+            pl.BlockSpec((block_m, K), lambda i, j, gids: (i, 0)),
+            pl.BlockSpec((None, K, block_n),
+                         lambda i, j, gids: (gids[i], 0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n),
+                               lambda i, j, gids: (i, j)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        interpret=interpret,
+    )(tile_groups, x, w)

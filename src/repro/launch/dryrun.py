@@ -1,0 +1,226 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the step function (train_step for train shapes,
+prefill_step / serve_step for inference shapes), lowers it against
+ShapeDtypeStruct inputs with explicit NamedShardings on the production
+mesh, compiles, and records memory_analysis / cost_analysis / collective
+traffic (EXPERIMENTS.md §Dry-run and §Roofline read the emitted JSON).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3_8b --shape train_4k
+  python -m repro.launch.dryrun --arch qwen3_8b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all [--multi-pod]
+"""
+
+import argparse
+import json
+import pathlib
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.serve.step import make_decode_step, make_prefill_step
+from repro.sharding.rules import ShardingRules
+from repro.train.optimizer import init_opt_state
+from repro.train.step import make_train_step
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, ("long_500k needs sub-quadratic attention; "
+                       f"{cfg.name} is pure full-attention (skip per "
+                       "DESIGN.md §6)")
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *,
+                multi_pod: bool = False):
+    """ShapeDtypeStruct stand-ins + PartitionSpecs for one cell."""
+    rules = ShardingRules(cfg, multi_pod=multi_pod)
+    key = jax.random.PRNGKey(0)
+    params = jax.eval_shape(lambda k: lm.init_params(cfg, k), key)
+    pspecs = rules.param_specs(params)
+    B, S = shape.global_batch, shape.seq_len
+
+    def tok(b, s):
+        return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+    if shape.kind == "train":
+        batch = {"tokens": tok(B, S)}
+        bspecs = {"tokens": rules.tokens_spec(B)}
+        if cfg.is_encdec:
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+            bspecs["frames"] = rules.encoder_spec()
+        opt = jax.eval_shape(init_opt_state, params)
+        ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+        metric_specs = {"grad_norm": P(), "lr": P(), "loss": P()}
+        return {"args": (params, opt, batch),
+                "specs": (pspecs, ospecs, bspecs),
+                "out_specs": (pspecs, ospecs, metric_specs),
+                "rules": rules}
+    if shape.kind == "prefill":
+        args = [params, tok(B, S)]
+        specs = [pspecs, rules.tokens_spec(B)]
+        if cfg.is_encdec:
+            args.append(jax.ShapeDtypeStruct((B, cfg.encoder_seq,
+                                              cfg.d_model), jnp.float32))
+            specs.append(rules.encoder_spec())
+        lsp = rules.logits_spec(B)
+        out = P(lsp[0], lsp[2])          # (B, V) last-position logits
+        return {"args": tuple(args), "specs": tuple(specs),
+                "out_specs": out, "rules": rules}
+    # decode: one token against a cache/state of seq_len
+    caches = jax.eval_shape(lambda _: lm.init_caches(cfg, B, S), 0)
+    cspecs = rules.cache_specs(caches, B)
+    bshard = rules.tokens_spec(B)
+    args = [params, tok(B, 1), caches,
+            jax.ShapeDtypeStruct((), jnp.int32)]
+    specs = [pspecs, bshard, cspecs, P()]
+    if cfg.is_encdec:
+        args.append(jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model),
+                                         jnp.bfloat16))
+        specs.append(rules.encoder_spec())
+    out_specs = (bshard, rules.logits_spec(B), cspecs)
+    return {"args": tuple(args), "specs": tuple(specs),
+            "out_specs": out_specs, "rules": rules}
+
+
+def auto_microbatches(cfg: ModelConfig, shape: ShapeConfig,
+                      data_size: int = 16, budget_bytes: float = 4e9) -> int:
+    """Gradient-accumulation factor so per-device saved activations
+    (one residual per layer under scan-remat) fit the budget."""
+    b_local = max(1, shape.global_batch // data_size)
+    saved = cfg.n_layers * b_local * shape.seq_len * cfg.d_model * 2
+    if cfg.n_experts:
+        # MoE dispatch/expert buffers add ~capacity_factor * top_k copies
+        saved *= (1 + 1.25 * cfg.experts_per_token / 2)
+    need = max(1, int(-(-saved // budget_bytes)))
+    mb = 1
+    while mb < need and mb < 16 and shape.global_batch % (mb * 2) == 0:
+        mb *= 2
+    return mb
+
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig, rules=None,
+               mesh=None):
+    if shape.kind == "train":
+        lspec = None
+        if rules is not None and mesh is not None:
+            lspec = NamedSharding(mesh, rules.logits_spec())
+        mb = auto_microbatches(cfg, shape)
+        return make_train_step(cfg, remat=True, logits_spec=lspec,
+                               microbatches=mb)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg)
+    return make_decode_step(cfg)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             save: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, shape)
+    label = f"{arch}/{shape_name}/{'multipod' if multi_pod else 'singlepod'}"
+    if not ok:
+        result = {"cell": label, "status": "skipped", "reason": why}
+        _emit(result, save)
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    spec = input_specs(cfg, shape, multi_pod=multi_pod)
+    spec["rules"].mesh = mesh      # enables shard_map paths (flash-decode)
+    step = build_step(cfg, shape, spec["rules"], mesh)
+
+    def shard(tree_specs):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                            is_leaf=lambda s: isinstance(s, P))
+
+    from repro.sharding import context as shctx
+
+    t0 = time.time()
+    try:
+        with mesh, shctx.use_rules(spec["rules"]):
+            jitted = jax.jit(step, in_shardings=shard(spec["specs"]),
+                             out_shardings=shard(spec["out_specs"]))
+            lowered = jitted.lower(*spec["args"])
+            lower_s = time.time() - t0
+            t1 = time.time()
+            compiled = lowered.compile()
+            compile_s = time.time() - t1
+            mem = compiled.memory_analysis()
+            roof = hlo_analysis.analyze(compiled)
+        mf = hlo_analysis.model_flops(cfg, shape)
+        n_dev = mesh.devices.size
+        result = {
+            "cell": label, "status": "ok",
+            "lower_s": round(lower_s, 1), "compile_s": round(compile_s, 1),
+            "n_devices": n_dev,
+            "memory": {
+                "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0) or 0),
+                "output_bytes": int(getattr(mem, "output_size_in_bytes", 0) or 0),
+                "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0) or 0),
+                "peak_bytes_per_device": roof.peak_bytes_per_device,
+            },
+            "roofline": roof.as_dict(),
+            "model_flops_global": mf,
+            "model_flops_per_device": mf / n_dev,
+            "useful_flops_ratio": (mf / n_dev) / max(roof.flops, 1.0),
+        }
+    except Exception as e:   # a failed cell is a bug — record it loudly
+        result = {"cell": label, "status": "error",
+                  "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()[-2000:]}
+    _emit(result, save)
+    return result
+
+
+def _emit(result: dict, save: bool):
+    line = {k: v for k, v in result.items() if k != "traceback"}
+    print(json.dumps(line))
+    if save:
+        ARTIFACTS.mkdir(parents=True, exist_ok=True)
+        name = result["cell"].replace("/", "__") + ".json"
+        (ARTIFACTS / name).write_text(json.dumps(result, indent=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        n_ok = n_skip = n_err = 0
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                r = run_cell(arch, shape, multi_pod=args.multi_pod)
+                n_ok += r["status"] == "ok"
+                n_skip += r["status"] == "skipped"
+                n_err += r["status"] == "error"
+        print(f"# dry-run summary: ok={n_ok} skipped={n_skip} errors={n_err}")
+        raise SystemExit(1 if n_err else 0)
+
+    assert args.arch and args.shape, "--arch and --shape (or --all)"
+    r = run_cell(args.arch, args.shape, multi_pod=args.multi_pod)
+    raise SystemExit(0 if r["status"] in ("ok", "skipped") else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,238 @@
+"""Trip-count-aware HLO cost walker.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE regardless
+of trip count (verified in tests/test_hlo_walk.py), which makes it useless
+for lax.scan-over-layers programs.  This walker parses the optimized HLO
+text and computes, with loop multipliers applied:
+
+  flops       — 2*prod(result)*prod(contracting dims) per dot op
+                (+ convolutions), counted anywhere (inside fusions too)
+  hbm_bytes   — operand + result bytes of boundary ops (fusions, dots,
+                collectives, copies, parameters are skipped): fusion
+                regions are the units of HBM traffic on TPU
+  coll_bytes  — per collective kind, result-shape bytes x traffic factor
+
+Trip counts come from the loop condition computation (the largest integer
+compared against the induction variable), matching lax.scan lowering.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_FACTOR = {
+    "all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+    "all-to-all": 1.0, "collective-permute": 1.0,
+}
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+"
+                     r"([\w\-]+)\((.*)\)", re.S)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_CALL_RE = re.compile(r"(?:to_apply|body|condition|branch_computations|"
+                      r"called_computations|calls)=\{?%?([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_list(type_str: str):
+    """All (dtype, dims) tuples in a (possibly tuple) type string."""
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        out.append((dt, dims))
+    return out
+
+
+def _bytes_of(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_list(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    type_str: str
+    op: str
+    args: str
+    line: str
+
+
+def _parse_computations(text: str) -> dict[str, list[_Instr]]:
+    comps: dict[str, list[_Instr]] = {}
+    current = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{", line)
+        if m and "=" not in line.split("(")[0]:
+            current = m.group(1)
+            comps[current] = []
+            continue
+        if line.startswith("}"):
+            current = None
+            continue
+        if current is None:
+            continue
+        dm = _DEF_RE.match(line)
+        if dm:
+            comps[current].append(_Instr(dm.group(1), dm.group(2),
+                                         dm.group(3), dm.group(4), line))
+    return comps
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "copy-start", "copy-done", "after-all", "while",
+    "conditional", "call", "partition-id", "replica-id", "iota",
+    "get-dimension-size", "domain", "custom-call",
+}
+
+
+def _dot_flops(inst: _Instr, symtab: dict[str, str]) -> float:
+    res = _shape_list(inst.type_str)
+    if not res:
+        return 0.0
+    _, rdims = res[0]
+    rprod = 1
+    for d in rdims:
+        rprod *= d
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.line)
+    contract = 1
+    if cm:
+        ops = _OPERAND_RE.findall(inst.args)
+        lhs_type = symtab.get(ops[0], "") if ops else ""
+        lhs_shapes = _shape_list(lhs_type)
+        if lhs_shapes:
+            _, ldims = lhs_shapes[0]
+            for idx in cm.group(1).split(","):
+                if idx and int(idx) < len(ldims):
+                    contract *= ldims[int(idx)]
+    return 2.0 * rprod * contract
+
+
+@dataclasses.dataclass
+class WalkCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_op: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    def scaled(self, k: float) -> "WalkCost":
+        d = defaultdict(float)
+        for key, v in self.coll_by_op.items():
+            d[key] = v * k
+        return WalkCost(self.flops * k, self.hbm_bytes * k,
+                        self.coll_bytes * k, d)
+
+    def add(self, other: "WalkCost"):
+        self.flops += other.flops
+        self.hbm_bytes += other.hbm_bytes
+        self.coll_bytes += other.coll_bytes
+        for key, v in other.coll_by_op.items():
+            self.coll_by_op[key] += v
+
+
+def _trip_count(cond_insts: list[_Instr]) -> int:
+    best = 1
+    for inst in cond_insts:
+        if inst.op == "constant":
+            m = re.search(r"constant\((\d+)\)", inst.line)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+class HloWalker:
+    def __init__(self, text: str):
+        self.comps = _parse_computations(text)
+        self._memo: dict[tuple[str, bool], WalkCost] = {}
+
+    def cost(self, comp: str, count_bytes: bool = True) -> WalkCost:
+        key = (comp, count_bytes)
+        if key in self._memo:
+            return self._memo[key]
+        total = WalkCost()
+        insts = self.comps.get(comp, [])
+        symtab = {i.name: i.type_str for i in insts}
+        for inst in insts:
+            op = inst.op
+            base = op.replace("-start", "").replace("-done", "")
+            if base in _COLL_FACTOR:
+                if op.endswith("-done"):
+                    continue
+                b = _bytes_of(inst.type_str) * _COLL_FACTOR[base]
+                total.coll_bytes += b
+                total.coll_by_op[base] += b
+                if count_bytes:
+                    total.hbm_bytes += _bytes_of(inst.type_str)
+                continue
+            if op == "while":
+                called = _CALL_RE.findall(inst.line)
+                body = next((c for c in called if "body" in c or True), None)
+                bm = re.search(r"body=%?([\w.\-]+)", inst.line)
+                cm = re.search(r"condition=%?([\w.\-]+)", inst.line)
+                if bm:
+                    trips = _trip_count(self.comps.get(
+                        cm.group(1), [])) if cm else 1
+                    total.add(self.cost(bm.group(1), count_bytes)
+                              .scaled(trips))
+                continue
+            if op in ("fusion", "call", "conditional", "custom-call",
+                      "async-start"):
+                for c in _CALL_RE.findall(inst.line):
+                    sub = self.cost(c, count_bytes=False)  # flops only
+                    total.add(WalkCost(sub.flops, 0.0, sub.coll_bytes,
+                                       sub.coll_by_op))
+                if count_bytes and op != "conditional":
+                    # result written once, read ~once downstream
+                    total.hbm_bytes += 2 * _bytes_of(inst.type_str)
+                continue
+            if op in ("dot", "convolution"):
+                total.flops += _dot_flops(inst, symtab)
+                if count_bytes:
+                    # dots genuinely stream both operands from HBM
+                    b = _bytes_of(inst.type_str)
+                    for o in _OPERAND_RE.findall(inst.args):
+                        b += _bytes_of(symtab.get(o, ""))
+                    total.hbm_bytes += b
+                continue
+            if op in _SKIP_BYTES_OPS:
+                continue
+            # element-wise / reduce / dynamic-slice etc. at top level:
+            # count the result once written + once read (operands are other
+            # ops' results — counting them again would double-bill each
+            # buffer per consumer, a CPU-vs-TPU fusion-granularity artifact)
+            if count_bytes:
+                total.hbm_bytes += 2 * _bytes_of(inst.type_str)
+        self._memo[key] = total
+        return total
+
+    def entry_cost(self) -> WalkCost:
+        # the ENTRY computation is usually named main.N
+        entry = None
+        for name in self.comps:
+            if name.startswith("main"):
+                entry = name
+                break
+        if entry is None:
+            entry = next(iter(self.comps))
+        return self.cost(entry)
+
+
+def walk(text: str) -> WalkCost:
+    return HloWalker(text).entry_cost()

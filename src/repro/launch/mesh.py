@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state.  The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+import to build these meshes on the CPU host platform.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """1-device mesh with the production axis names (smoke tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_ep_mesh(n_experts: int, *, devices: int = 256):
+    """Expert-parallel regroup used by the MoE §Perf hillclimb:
+    ("data", "expert", "model")."""
+    assert devices % n_experts == 0
+    rest = devices // n_experts
+    data = 16 if rest % 16 == 0 else rest
+    model = rest // data if rest % data == 0 else 1
+    return jax.make_mesh((data, n_experts, model),
+                         ("data", "expert", "model"))

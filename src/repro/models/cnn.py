@@ -1,0 +1,206 @@
+"""Functional JAX CNNs (AlexNet / VGG-16 / ResNet-18, CIFAR-10 variants).
+
+Convolutions are expressed as im2col + GEMM so the *same* forward pass can
+route every GEMM through either jnp (fp32 reference) or the HURRY crossbar
+functional model (`repro.core.crossbar_linear`, int8 bit-sliced with
+optional read noise) — that is how the simulator's accuracy claims are
+computed rather than assumed.  Layer shapes mirror
+``repro.core.workload`` so the scheduler and the functional model describe
+the same networks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.crossbar import CrossbarConfig, crossbar_linear
+
+MatmulFn = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+def fp_matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return x @ w
+
+
+def make_crossbar_matmul(cfg: Optional[CrossbarConfig] = None,
+                         noise_key: Optional[jax.Array] = None) -> MatmulFn:
+    cfg = cfg or CrossbarConfig()
+
+    def mm(x, w):
+        return crossbar_linear(x, w, cfg, noise_key)
+    return mm
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def im2col(x: jnp.ndarray, k: int, stride: int, pad: int) -> jnp.ndarray:
+    """NHWC -> (N, OH, OW, k*k*C) patches."""
+    n, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    oh = (h + 2 * pad - k) // stride + 1
+    ow = (w + 2 * pad - k) // stride + 1
+    patches = jax.lax.conv_general_dilated_patches(
+        xp.transpose(0, 3, 1, 2), (k, k), (stride, stride), "VALID")
+    # (N, C*k*k, OH, OW) -> (N, OH, OW, C*k*k)
+    return patches.transpose(0, 2, 3, 1).reshape(n, oh, ow, c * k * k)
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, stride: int,
+           pad: int, mm: MatmulFn) -> jnp.ndarray:
+    """w: (k, k, Cin, Cout) applied via im2col GEMM."""
+    k = w.shape[0]
+    cols = im2col(x, k, stride, pad)                    # (N,OH,OW,Cin*k*k)
+    n, oh, ow, kk = cols.shape
+    wm = w.transpose(2, 0, 1, 3).reshape(kk, -1)        # (Cin*k*k, Cout)
+    y = mm(cols.reshape(-1, kk), wm).reshape(n, oh, ow, -1)
+    return y + b
+
+
+def maxpool(x: jnp.ndarray, k: int = 2, stride: int = 2) -> jnp.ndarray:
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, k, k, 1), (1, stride, stride, 1), "VALID")
+
+
+def _init_conv(key, k, cin, cout):
+    wkey, _ = jax.random.split(key)
+    fan_in = k * k * cin
+    w = jax.random.normal(wkey, (k, k, cin, cout)) * jnp.sqrt(2.0 / fan_in)
+    return {"w": w, "b": jnp.zeros((cout,))}
+
+
+def _init_fc(key, fin, fout):
+    w = jax.random.normal(key, (fin, fout)) * jnp.sqrt(2.0 / fin)
+    return {"w": w, "b": jnp.zeros((fout,))}
+
+
+# ---------------------------------------------------------------------------
+# AlexNet (CIFAR)
+# ---------------------------------------------------------------------------
+
+_ALEX_CONVS = [(3, 64), (64, 192), (192, 384), (384, 256), (256, 256)]
+
+
+def init_alexnet(key: jax.Array) -> dict:
+    keys = jax.random.split(key, 8)
+    params = {f"conv{i+1}": _init_conv(keys[i], 3, cin, cout)
+              for i, (cin, cout) in enumerate(_ALEX_CONVS)}
+    params["fc6"] = _init_fc(keys[5], 256 * 4 * 4, 1024)
+    params["fc7"] = _init_fc(keys[6], 1024, 1024)
+    params["fc8"] = _init_fc(keys[7], 1024, 10)
+    return params
+
+
+def alexnet_forward(params: dict, x: jnp.ndarray,
+                    mm: MatmulFn = fp_matmul) -> jnp.ndarray:
+    pools_after = {1, 2, 5}
+    for i in range(1, 6):
+        p = params[f"conv{i}"]
+        x = jax.nn.relu(conv2d(x, p["w"], p["b"], 1, 1, mm))
+        if i in pools_after:
+            x = maxpool(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(mm(x, params["fc6"]["w"]) + params["fc6"]["b"])
+    x = jax.nn.relu(mm(x, params["fc7"]["w"]) + params["fc7"]["b"])
+    return mm(x, params["fc8"]["w"]) + params["fc8"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# VGG-16 (CIFAR)
+# ---------------------------------------------------------------------------
+
+_VGG_CFG = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+            512, 512, 512, "M", 512, 512, 512, "M"]
+
+
+def init_vgg16(key: jax.Array) -> dict:
+    params = {}
+    cin, i = 3, 1
+    keys = jax.random.split(key, 16)
+    ki = 0
+    for v in _VGG_CFG:
+        if v == "M":
+            continue
+        params[f"conv{i}"] = _init_conv(keys[ki], 3, cin, v)
+        cin, i, ki = v, i + 1, ki + 1
+    params["fc1"] = _init_fc(keys[14], 512, 512)
+    params["fc2"] = _init_fc(keys[15], 512, 10)
+    return params
+
+
+def vgg16_forward(params: dict, x: jnp.ndarray,
+                  mm: MatmulFn = fp_matmul) -> jnp.ndarray:
+    i = 1
+    for v in _VGG_CFG:
+        if v == "M":
+            x = maxpool(x)
+        else:
+            p = params[f"conv{i}"]
+            x = jax.nn.relu(conv2d(x, p["w"], p["b"], 1, 1, mm))
+            i += 1
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(mm(x, params["fc1"]["w"]) + params["fc1"]["b"])
+    return mm(x, params["fc2"]["w"]) + params["fc2"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# ResNet-18 (CIFAR)
+# ---------------------------------------------------------------------------
+
+_RESNET_STAGES = [(64, 2, 1), (128, 2, 2), (256, 2, 2), (512, 2, 2)]
+
+
+def init_resnet18(key: jax.Array) -> dict:
+    params = {"conv0": _init_conv(key, 3, 3, 64)}
+    keys = iter(jax.random.split(key, 64))
+    cin = 64
+    for s, (ch, blocks, _) in enumerate(_RESNET_STAGES):
+        for b in range(blocks):
+            pre = f"s{s}b{b}"
+            params[f"{pre}_conv1"] = _init_conv(next(keys), 3, cin, ch)
+            params[f"{pre}_conv2"] = _init_conv(next(keys), 3, ch, ch)
+            if cin != ch:
+                params[f"{pre}_proj"] = _init_conv(next(keys), 1, cin, ch)
+            cin = ch
+    params["fc"] = _init_fc(next(keys), 512, 10)
+    return params
+
+
+def resnet18_forward(params: dict, x: jnp.ndarray,
+                     mm: MatmulFn = fp_matmul) -> jnp.ndarray:
+    p = params["conv0"]
+    x = jax.nn.relu(conv2d(x, p["w"], p["b"], 1, 1, mm))
+    for s, (ch, blocks, stage_stride) in enumerate(_RESNET_STAGES):
+        for b in range(blocks):
+            pre = f"s{s}b{b}"
+            stride = stage_stride if b == 0 else 1
+            res = x
+            p1 = params[f"{pre}_conv1"]
+            h = jax.nn.relu(conv2d(x, p1["w"], p1["b"], stride, 1, mm))
+            p2 = params[f"{pre}_conv2"]
+            h = conv2d(h, p2["w"], p2["b"], 1, 1, mm)
+            if f"{pre}_proj" in params:
+                pp = params[f"{pre}_proj"]
+                res = conv2d(x, pp["w"], pp["b"], stride, 0, mm)
+            x = jax.nn.relu(h + res)
+    x = x.mean(axis=(1, 2))
+    return mm(x, params["fc"]["w"]) + params["fc"]["b"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNModel:
+    init: Callable[[jax.Array], dict]
+    forward: Callable[..., jnp.ndarray]
+
+
+CNN_MODELS = {
+    "alexnet": CNNModel(init_alexnet, alexnet_forward),
+    "vgg16": CNNModel(init_vgg16, vgg16_forward),
+    "resnet18": CNNModel(init_resnet18, resnet18_forward),
+}

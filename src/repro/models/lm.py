@@ -1,0 +1,393 @@
+"""Generic LM assembly for all assigned architecture families.
+
+``init_params(cfg, key)`` builds a pytree with per-layer weights stacked
+on a leading layer axis; ``forward`` / ``prefill`` / ``decode_step`` run
+the model with ``jax.lax.scan`` over that axis (small HLO, fast lowering
+even for 88-layer models).
+
+Families:
+  dense | moe | vlm      — pre-norm decoder blocks (attention + MLP/MoE);
+                           vlm shares the text path (vision frontend is a
+                           stub supplying embeddings / M-RoPE positions)
+  ssm (xlstm)            — groups of (k-1) mLSTM + 1 sLSTM blocks
+  hybrid (zamba2)        — groups of k Mamba2 blocks + ONE shared
+                           attention block applied after each group
+                           (weights reused; per-application KV caches)
+  audio (whisper)        — encoder (full attn over stubbed frame
+                           embeddings) + decoder (causal self + cross)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import layers as L
+
+
+def _stacked(init_fn, key, n: int):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def _sinusoidal(positions: jnp.ndarray, d: int, dtype) -> jnp.ndarray:
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key: jax.Array,
+                dtype=jnp.float32) -> dict:
+    keys = jax.random.split(key, 8)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    params: dict[str, Any] = {
+        "embed": jax.random.normal(keys[0], (cfg.padded_vocab, d)) * 0.02,
+        "final_norm": L.init_norm(d, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(keys[1],
+                                              (d, cfg.padded_vocab)) * 0.02
+
+    def block_init(k):
+        ks = jax.random.split(k, 4)
+        blk = {"ln1": L.init_norm(d, cfg.norm),
+               "attn": L.init_attention(ks[0], d, cfg.n_heads,
+                                        cfg.n_kv_heads, hd, cfg.qk_norm),
+               "ln2": L.init_norm(d, cfg.norm)}
+        if cfg.n_experts:
+            blk["moe"] = L.init_moe(ks[1], d, cfg.d_ff, cfg.n_experts)
+        else:
+            blk["mlp"] = L.init_mlp(ks[1], d, cfg.d_ff)
+        return blk
+
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        params["blocks"] = _stacked(block_init, keys[2], cfg.n_layers)
+    elif fam == "hybrid":
+        k_grp = cfg.shared_attn_every
+        n_groups = cfg.n_layers // k_grp
+
+        def mamba_group(kk):
+            return _stacked(lambda k2: {
+                "ln": L.init_norm(d, cfg.norm),
+                "mamba": L.init_mamba2(k2, d, cfg)}, kk, k_grp)
+        params["groups"] = _stacked(mamba_group, keys[2], n_groups)
+        params["shared"] = block_init(keys[3])       # ONE shared attn block
+        params["shared_ln"] = L.init_norm(d, cfg.norm)
+    elif fam == "ssm":
+        k_grp = cfg.xlstm_slstm_every
+        n_groups = cfg.n_layers // k_grp
+
+        def xlstm_group(kk):
+            ks2 = jax.random.split(kk, 2)
+            return {
+                "mlstm": _stacked(lambda k2: {
+                    "ln": L.init_norm(d, cfg.norm),
+                    "cell": L.init_mlstm(k2, d, cfg)}, ks2[0], k_grp - 1),
+                "slstm": {"ln": L.init_norm(d, cfg.norm),
+                          "cell": L.init_slstm(ks2[1], d, cfg)},
+            }
+        params["groups"] = _stacked(xlstm_group, keys[2], n_groups)
+    elif fam == "audio":
+        def enc_block(k):
+            ks = jax.random.split(k, 2)
+            return {"ln1": L.init_norm(d, cfg.norm),
+                    "attn": L.init_attention(ks[0], d, cfg.n_heads,
+                                             cfg.n_kv_heads, hd),
+                    "ln2": L.init_norm(d, cfg.norm),
+                    "mlp": L.init_mlp(ks[1], d, cfg.d_ff)}
+
+        def dec_block(k):
+            ks = jax.random.split(k, 3)
+            return {"ln1": L.init_norm(d, cfg.norm),
+                    "self_attn": L.init_attention(ks[0], d, cfg.n_heads,
+                                                  cfg.n_kv_heads, hd),
+                    "ln_x": L.init_norm(d, cfg.norm),
+                    "cross_attn": L.init_attention(ks[1], d, cfg.n_heads,
+                                                   cfg.n_kv_heads, hd),
+                    "ln2": L.init_norm(d, cfg.norm),
+                    "mlp": L.init_mlp(ks[2], d, cfg.d_ff)}
+        params["enc_blocks"] = _stacked(enc_block, keys[2],
+                                        cfg.encoder_layers)
+        params["dec_blocks"] = _stacked(dec_block, keys[3], cfg.n_layers)
+        params["enc_norm"] = L.init_norm(d, cfg.norm)
+    else:
+        raise ValueError(f"unknown family {fam}")
+
+    return jax.tree.map(lambda x: x.astype(dtype) if x.dtype == jnp.float32
+                        else x, params)
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill without cache)
+# ---------------------------------------------------------------------------
+
+def _decoder_block(blk, x, positions, cfg, kv_cache=None, cross=None):
+    h, new_cache = L.attention(
+        blk["attn"] if "attn" in blk else blk["self_attn"],
+        L.apply_norm(x, blk["ln1"], cfg.norm, cfg.norm_eps),
+        positions, cfg, kv_cache=kv_cache)
+    x = x + h
+    if cross is not None:
+        hc, _ = L.attention(blk["cross_attn"],
+                            L.apply_norm(x, blk["ln_x"], cfg.norm,
+                                         cfg.norm_eps),
+                            positions, cfg, causal=False, cross_kv=cross)
+        x = x + hc
+    y = L.apply_norm(x, blk["ln2"], cfg.norm, cfg.norm_eps)
+    if "moe" in blk:
+        x = x + L.moe(blk["moe"], y, cfg.n_experts, cfg.experts_per_token,
+                      cfg.act)
+    else:
+        x = x + L.mlp(blk["mlp"], y, cfg.act)
+    return x, new_cache
+
+
+def encode(params: dict, cfg: ModelConfig, frames: jnp.ndarray,
+           compute_dtype=jnp.bfloat16, remat: bool = False) -> jnp.ndarray:
+    """Whisper encoder: stubbed frame embeddings -> encoder states.
+
+    Serving computes this once at prefill; ``decode_step`` consumes the
+    result as ``encoder_states``.
+    """
+    enc = frames.astype(compute_dtype)
+    enc_pos = jnp.broadcast_to(jnp.arange(enc.shape[1])[None], enc.shape[:2])
+    enc = enc + _sinusoidal(enc_pos, cfg.d_model, compute_dtype)
+
+    def enc_body(ec, blk):
+        h, _ = L.attention(blk["attn"],
+                           L.apply_norm(ec, blk["ln1"], cfg.norm,
+                                        cfg.norm_eps),
+                           enc_pos, cfg, causal=False)
+        ec = ec + h
+        ec = ec + L.mlp(blk["mlp"],
+                        L.apply_norm(ec, blk["ln2"], cfg.norm,
+                                     cfg.norm_eps), cfg.act)
+        return ec, None
+    if remat:
+        enc_body = jax.checkpoint(enc_body, prevent_cse=False)
+    enc, _ = jax.lax.scan(enc_body, enc, params["enc_blocks"])
+    return L.apply_norm(enc, params["enc_norm"], cfg.norm, cfg.norm_eps)
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+            positions: Optional[jnp.ndarray] = None,
+            encoder_input: Optional[jnp.ndarray] = None,
+            compute_dtype=jnp.bfloat16, remat: bool = False) -> jnp.ndarray:
+    """Full-sequence forward -> logits (B, S, padded_vocab)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(compute_dtype)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        if cfg.mrope_sections:
+            positions = jnp.broadcast_to(positions[None], (3, b, s))
+    if cfg.rope_theta <= 0:          # absolute sinusoidal positions
+        pos2d = positions if positions.ndim == 2 else positions[0]
+        x = x + _sinusoidal(pos2d, cfg.d_model, compute_dtype)
+
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        def body(xc, blk):
+            y, _ = _decoder_block(blk, xc, positions, cfg)
+            return y, None
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+    elif fam == "hybrid":
+        shared = params["shared"]
+
+        def group_body(xc, grp):
+            def mamba_body(xi, lp):
+                h = L.mamba2(lp["mamba"],
+                             L.apply_norm(xi, lp["ln"], cfg.norm,
+                                          cfg.norm_eps), cfg)
+                return xi + h, None
+            if remat:
+                mamba_body = jax.checkpoint(mamba_body, prevent_cse=False)
+            xc, _ = jax.lax.scan(mamba_body, xc, grp)
+            y, _ = _decoder_block(shared, xc, positions, cfg)
+            return y, None
+        x, _ = jax.lax.scan(group_body, x, params["groups"])
+    elif fam == "ssm":
+        def group_body(xc, grp):
+            def ml_body(xi, lp):
+                h = L.mlstm(lp["cell"],
+                            L.apply_norm(xi, lp["ln"], cfg.norm,
+                                         cfg.norm_eps), cfg)
+                return xi + h, None
+            if remat:
+                ml_body = jax.checkpoint(ml_body, prevent_cse=False)
+            xc, _ = jax.lax.scan(ml_body, xc, grp["mlstm"])
+            sl = grp["slstm"]
+            xc = xc + L.slstm(sl["cell"],
+                              L.apply_norm(xc, sl["ln"], cfg.norm,
+                                           cfg.norm_eps), cfg)
+            return xc, None
+        x, _ = jax.lax.scan(group_body, x, params["groups"])
+    elif fam == "audio":
+        assert encoder_input is not None, "whisper needs frame embeddings"
+        enc = encode(params, cfg, encoder_input, compute_dtype, remat)
+
+        hd = cfg.resolved_head_dim
+
+        def dec_body(xc, blk):
+            # precompute this block's cross K/V from encoder states
+            kx = (enc @ blk["cross_attn"]["wk"].astype(xc.dtype)) \
+                .reshape(b, -1, cfg.n_kv_heads, hd)
+            vx = (enc @ blk["cross_attn"]["wv"].astype(xc.dtype)) \
+                .reshape(b, -1, cfg.n_kv_heads, hd)
+            y, _ = _decoder_block(blk, xc, positions, cfg, cross=(kx, vx))
+            return y, None
+        if remat:
+            dec_body = jax.checkpoint(dec_body, prevent_cse=False)
+        x, _ = jax.lax.scan(dec_body, x, params["dec_blocks"])
+    else:
+        raise ValueError(fam)
+
+    x = L.apply_norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+    head = params.get("lm_head", None)
+    if head is None:
+        head = params["embed"].T
+    return x @ head.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init + decode step
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16, params: Optional[dict] = None) -> dict:
+    """Stacked per-layer decode state for the family."""
+    fam = cfg.family
+
+    def kv(n):
+        c = L.init_kv_cache(batch, max_len, cfg, dtype)
+        return jax.tree.map(lambda t: jnp.broadcast_to(t, (n,) + t.shape), c)
+
+    if fam in ("dense", "moe", "vlm"):
+        return {"kv": kv(cfg.n_layers)}
+    if fam == "hybrid":
+        n_groups = cfg.n_layers // cfg.shared_attn_every
+        d_inner = cfg.ssm_expand * cfg.d_model
+        h = cfg.ssm_heads or max(1, d_inner // 64)
+        hd = d_inner // h
+        ssm = {"ssm": jnp.zeros((n_groups, cfg.shared_attn_every, batch, h,
+                                 cfg.ssm_state, hd), jnp.float32),
+               "conv": jnp.zeros((n_groups, cfg.shared_attn_every, batch,
+                                  cfg.ssm_conv - 1,
+                                  d_inner + 2 * cfg.ssm_state), jnp.float32)}
+        return {"mamba": ssm, "kv": kv(n_groups)}
+    if fam == "ssm":
+        k_grp = cfg.xlstm_slstm_every
+        n_groups = cfg.n_layers // k_grp
+        d_inner = cfg.ssm_expand * cfg.d_model
+        h = cfg.n_heads
+        hd = d_inner // h
+        ml = {"C": jnp.zeros((n_groups, k_grp - 1, batch, h, hd, hd),
+                             jnp.float32),
+              "n": jnp.zeros((n_groups, k_grp - 1, batch, h, hd), jnp.float32),
+              "m": jnp.full((n_groups, k_grp - 1, batch, h), -30.0,
+                            jnp.float32)}
+        sl = jax.tree.map(lambda t: jnp.broadcast_to(t, (n_groups,) + t.shape),
+                          L.init_slstm_state(batch, cfg.d_model, dtype))
+        return {"mlstm": ml, "slstm": sl}
+    if fam == "audio":
+        return {"kv": kv(cfg.n_layers)}   # self-attn caches; cross computed
+    raise ValueError(fam)
+
+
+def decode_step(params: dict, cfg: ModelConfig, token: jnp.ndarray,
+                caches: dict, position: jnp.ndarray,
+                encoder_states: Optional[jnp.ndarray] = None,
+                compute_dtype=jnp.bfloat16) -> tuple[jnp.ndarray, dict]:
+    """One-token decode: token (B, 1) -> logits (B, 1, V), new caches."""
+    b = token.shape[0]
+    x = params["embed"][token].astype(compute_dtype)
+    positions = jnp.broadcast_to(position.reshape(1, 1), (b, 1))
+    if cfg.mrope_sections:
+        positions = jnp.broadcast_to(positions[None], (3, b, 1))
+    if cfg.rope_theta <= 0:
+        x = x + _sinusoidal(positions if positions.ndim == 2
+                            else positions[0], cfg.d_model, compute_dtype)
+
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        def body(xc, scanned):
+            blk, cache = scanned
+            y, nc = _decoder_block(blk, xc, positions, cfg, kv_cache=cache)
+            return y, nc
+        x, new_kv = jax.lax.scan(body, x, (params["blocks"], caches["kv"]))
+        new_caches = {"kv": new_kv}
+    elif fam == "hybrid":
+        shared = params["shared"]
+
+        def group_body(xc, scanned):
+            grp, mamba_c, kv_c = scanned
+
+            def mamba_body(xi, inner):
+                lp, st = inner
+                h, nst = L.mamba2_step(
+                    lp["mamba"], L.apply_norm(xi, lp["ln"], cfg.norm,
+                                              cfg.norm_eps), st, cfg)
+                return xi + h, nst
+            xc, new_mamba = jax.lax.scan(mamba_body, xc, (grp, mamba_c))
+            y, new_kv = _decoder_block(shared, xc, positions, cfg,
+                                       kv_cache=kv_c)
+            return y, (new_mamba, new_kv)
+        x, (new_mamba, new_kv) = jax.lax.scan(
+            group_body, x, (params["groups"], caches["mamba"], caches["kv"]))
+        new_caches = {"mamba": new_mamba, "kv": new_kv}
+    elif fam == "ssm":
+        def group_body(xc, scanned):
+            grp, ml_c, sl_c = scanned
+
+            def ml_body(xi, inner):
+                lp, st = inner
+                h, nst = L.mlstm_step(
+                    lp["cell"], L.apply_norm(xi, lp["ln"], cfg.norm,
+                                             cfg.norm_eps), st, cfg)
+                return xi + h, nst
+            xc, new_ml = jax.lax.scan(ml_body, xc, (grp["mlstm"], ml_c))
+            sl = grp["slstm"]
+            h, new_sl = L.slstm_step(
+                sl["cell"], L.apply_norm(xc, sl["ln"], cfg.norm,
+                                         cfg.norm_eps), sl_c, cfg)
+            return xc + h, (new_ml, new_sl)
+        x, (new_ml, new_sl) = jax.lax.scan(
+            group_body, x, (params["groups"], caches["mlstm"],
+                            caches["slstm"]))
+        new_caches = {"mlstm": new_ml, "slstm": new_sl}
+    elif fam == "audio":
+        assert encoder_states is not None
+        hd = cfg.resolved_head_dim
+
+        def body(xc, scanned):
+            blk, cache = scanned
+            kx = (encoder_states @ blk["cross_attn"]["wk"].astype(xc.dtype)) \
+                .reshape(b, -1, cfg.n_kv_heads, hd)
+            vx = (encoder_states @ blk["cross_attn"]["wv"].astype(xc.dtype)) \
+                .reshape(b, -1, cfg.n_kv_heads, hd)
+            y, nc = _decoder_block(blk, xc, positions, cfg, kv_cache=cache,
+                                   cross=(kx, vx))
+            return y, nc
+        x, new_kv = jax.lax.scan(body, x,
+                                 (params["dec_blocks"], caches["kv"]))
+        new_caches = {"kv": new_kv}
+    else:
+        raise ValueError(fam)
+
+    x = L.apply_norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+    head = params.get("lm_head", None)
+    if head is None:
+        head = params["embed"].T
+    return x @ head.astype(x.dtype), new_caches

@@ -1,0 +1,70 @@
+"""int8 KV-cache quantization (per-head symmetric scales).
+
+The decode roofline floor is KV-cache bytes / HBM bandwidth
+(EXPERIMENTS.md §Perf cell 2); int8 K/V halves it. Layout mirrors the
+bf16 cache: {"k": int8 (B,S,Hkv,hd), "k_scale": f32 (B,S,Hkv), ...,
+"index"} — per-(position, head) scales keep the dequant error at the
+quantization-noise floor (KIVI-style per-token scaling).
+
+The functions here are the drop-in cache update/read pair used by the
+quantized decode path; correctness is pinned in
+tests/test_kv_quant.py (attention output vs the bf16 cache).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_kv(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(..., hd) -> int8 values + per-(...,) scale."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray,
+                  dtype=jnp.bfloat16) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def init_quant_kv_cache(batch: int, max_len: int, cfg) -> dict:
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    length = min(max_len, cfg.sliding_window) if cfg.sliding_window \
+        else max_len
+    return {
+        "k": jnp.zeros((batch, length, hkv, hd), jnp.int8),
+        "k_scale": jnp.zeros((batch, length, hkv), jnp.float32),
+        "v": jnp.zeros((batch, length, hkv, hd), jnp.int8),
+        "v_scale": jnp.zeros((batch, length, hkv), jnp.float32),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def update_quant_cache(cache: dict, k: jnp.ndarray, v: jnp.ndarray) -> dict:
+    """Append one step's K/V (B, s, Hkv, hd) at the cache index."""
+    idx = cache["index"]
+    s = k.shape[1]
+    length = cache["k"].shape[1]
+    slot = idx % length if length < (1 << 30) else idx
+    qk, sk = quantize_kv(k)
+    qv, sv = quantize_kv(v)
+    return {
+        "k": jax.lax.dynamic_update_slice(cache["k"], qk, (0, slot, 0, 0)),
+        "k_scale": jax.lax.dynamic_update_slice(cache["k_scale"], sk,
+                                                (0, slot, 0)),
+        "v": jax.lax.dynamic_update_slice(cache["v"], qv, (0, slot, 0, 0)),
+        "v_scale": jax.lax.dynamic_update_slice(cache["v_scale"], sv,
+                                                (0, slot, 0)),
+        "index": idx + s,
+    }
+
+
+def read_quant_cache(cache: dict, dtype=jnp.bfloat16
+                     ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    k = dequantize_kv(cache["k"], cache["k_scale"], dtype)
+    v = dequantize_kv(cache["v"], cache["v_scale"], dtype)
+    return k, v

@@ -1,0 +1,55 @@
+"""Serving steps: prefill (long-prompt forward) and single-token decode.
+
+``serve_step`` (decode) is what the decode_32k / long_500k dry-run cells
+lower: one new token against a KV cache / recurrent state of seq_len.
+``prefill_step`` lowers the prefill_32k cells: a full forward over the
+prompt returning last-position logits (chunked attention keeps the score
+buffer bounded; see models/layers.mha_chunked).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, tokens, frames: Optional[jnp.ndarray] = None):
+        logits = lm.forward(params, cfg, tokens, encoder_input=frames)
+        return logits[:, -1]
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def serve_step(params, token, caches, position,
+                   encoder_states: Optional[jnp.ndarray] = None):
+        logits, new_caches = lm.decode_step(
+            params, cfg, token, caches, position,
+            encoder_states=encoder_states)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], logits, new_caches
+    return serve_step
+
+
+def greedy_generate(cfg: ModelConfig, params, prompt: jnp.ndarray,
+                    max_new: int, max_len: int = 0,
+                    encoder_states: Optional[jnp.ndarray] = None):
+    """Simple batched greedy decode loop (examples / tests)."""
+    b, s = prompt.shape
+    max_len = max_len or (s + max_new)
+    caches = lm.init_caches(cfg, b, max_len, params=params)
+    decode = make_decode_step(cfg)
+    # prefill token-by-token (correct for every family incl. SSM states)
+    tok = prompt[:, :1]
+    out = [tok]
+    for i in range(s + max_new - 1):
+        nxt, _, caches = decode(params, tok, caches, jnp.array(i),
+                                encoder_states=encoder_states)
+        tok = prompt[:, i + 1:i + 2] if i + 1 < s else nxt
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

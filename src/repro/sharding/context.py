@@ -1,0 +1,98 @@
+"""Ambient sharding context for activation constraints inside layers.
+
+Model code is mesh-agnostic; when the launcher lowers under a production
+mesh it installs the resolved ``ShardingRules`` here, and the layer
+library applies ``with_sharding_constraint`` at the points GSPMD tends to
+lose track of (head-split reshapes inside scan bodies, MoE dispatch
+buffers).  Without a context every constraint is a no-op, so smoke tests
+and single-device runs are unaffected.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_ACTIVE: list = []
+
+
+@contextlib.contextmanager
+def use_rules(rules):
+    _ACTIVE.append(rules)
+    try:
+        yield
+    finally:
+        _ACTIVE.pop()
+
+
+def get():
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def _wsc(x, spec: P):
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:       # no mesh context: leave unconstrained
+        return x
+
+
+def constrain_heads(x, role: str = "q"):
+    """(B, S, H, hd) activations: heads on model when divisible.
+
+    Fallback (§Perf iteration G2): when the head count does not divide
+    the model axis (phi3 40H, granite-moe 24H, xlstm 4H), ``q`` shards
+    the SEQUENCE dim on model instead — context-parallel attention: each
+    model shard computes scores for S/16 query rows against the full
+    (replicated) K/V, recovering the 16x that head-replication wastes.
+    Decode (S=1) cannot seq-shard and stays replicated.
+    """
+    r = get()
+    if r is None:
+        return x
+    if x.shape[2] % r.model_size == 0:
+        return _wsc(x, P(r.batch, None, "model", None))
+    if role == "q" and x.shape[1] % r.model_size == 0:
+        return _wsc(x, P(r.batch, "model", None, None))
+    return _wsc(x, P(r.batch, None, None, None))
+
+
+def constrain_ff(x):
+    """(B, S, F) hidden activations: F on model when divisible."""
+    r = get()
+    if r is None:
+        return x
+    f_ax = "model" if x.shape[-1] % r.model_size == 0 else None
+    return _wsc(x, P(r.batch, None, f_ax))
+
+
+def constrain_resid(x):
+    """(B, S, D) residual-stream activations: batch-sharded, D replicated."""
+    r = get()
+    if r is None:
+        return x
+    return _wsc(x, P(r.batch, None, None))
+
+
+def constrain_expert(x):
+    """(B, E, cap, D) MoE dispatch buffers: batch on data axis."""
+    r = get()
+    if r is None:
+        return x
+    b_ax = r.batch if x.shape[0] % r.data_size == 0 else None
+    return _wsc(x, P(b_ax, None, None, None))
+
+
+def constrain_state_matrix(x):
+    """(B, NC, H, d, e) chunked recurrent states (mLSTM C / Mamba2 SSD):
+    batch on data, first state dim on model when divisible — this is what
+    keeps xLSTM's (hd x hd) matrix memory from blowing HBM (§Perf X1)."""
+    r = get()
+    if r is None:
+        return x
+    b_ax = r.batch if x.shape[0] % r.data_size == 0 else None
+    d_ax = "model" if x.shape[-2] % r.model_size == 0 else None
+    lead = [None] * (x.ndim - 4)
+    return _wsc(x, P(b_ax, *lead, None, d_ax, None))

@@ -1,0 +1,183 @@
+"""Logical sharding rules: param/activation PartitionSpecs per architecture.
+
+Mesh axes:
+  single-pod : ("data", "model") = (16, 16)
+  multi-pod  : ("pod", "data", "model") = (2, 16, 16) — "pod" extends the
+               data-parallel dimension (batch + FSDP weight sharding).
+
+Rules (MaxText-style logical axes, resolved per arch):
+  * d_model rows of big weights -> "data" (ZeRO/FSDP; gathered per layer
+    inside the scan)
+  * attention head dims -> "model" when n_(kv_)heads divides the model
+    axis, else replicated (fallback documented in DESIGN.md §6:
+    phi3 40H, granite-moe 24H, xlstm 4H)
+  * d_ff / d_inner -> "model" (Megatron column/row pattern)
+  * vocab -> "model" (padded to 256, see ModelConfig.padded_vocab)
+  * MoE experts -> replicated by default (each expert TP-sharded on d_ff);
+    an expert-parallel mesh regroup (launch/mesh.make_ep_mesh) is the
+    recorded next step for the collective-bound MoE train cells (§Perf)
+  * decode KV caches: batch -> "data" when divisible; cache seq -> "model"
+    (sequence-sharded flash-decode combine happens via psum inside
+    attention under SPMD)
+
+Everything returns ``jax.sharding.PartitionSpec`` trees aligned with the
+param pytree from ``repro.models.lm.init_params``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def batch_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def _div(n: int, size: int) -> bool:
+    return n > 0 and n % size == 0
+
+
+class ShardingRules:
+    """Resolves PartitionSpecs for one (config, mesh) pair."""
+
+    def __init__(self, cfg: ModelConfig, *, model_size: int = 16,
+                 data_size: int = 16, multi_pod: bool = False):
+        self.cfg = cfg
+        self.model = "model"
+        self.data = "data"
+        self.model_size = model_size
+        self.data_size = data_size
+        self.multi_pod = multi_pod
+        self.batch = batch_axes(multi_pod)
+        self.mesh = None           # set by the launcher for shard_map paths
+        c = cfg
+        self.heads_shardable = _div(c.n_heads, model_size)
+        self.kv_shardable = _div(c.n_kv_heads, model_size)
+        self.ff_shardable = _div(c.d_ff, model_size)
+        self.dmodel_shardable = _div(c.d_model, data_size)
+        d_inner = c.ssm_expand * c.d_model
+        self.dinner_shardable = _div(d_inner, model_size)
+
+    # -- parameter specs ------------------------------------------------------
+    def _leaf_spec(self, path: tuple[str, ...], leaf) -> P:
+        name = path[-1]
+        rank = leaf.ndim
+        c = self.cfg
+        dm = self.data if self.dmodel_shardable else None
+        mh = self.model if self.heads_shardable else None
+        mkv = self.model if self.kv_shardable else None
+        mf = self.model if self.ff_shardable else None
+        mi = self.model if self.dinner_shardable else None
+
+        def lead(spec: tuple) -> P:
+            """Pad leading stacked-layer/group axes with None."""
+            return P(*([None] * (rank - len(spec)) + list(spec)))
+
+        if name == "embed":
+            return P(self.model if _div(c.padded_vocab, self.model_size)
+                     else None, dm)
+        if name == "lm_head":
+            return P(dm, self.model)
+        if name in ("wq", "wk", "wv", "wo"):
+            # heads shardable: Megatron head-dim TP.  Otherwise (§Perf G3)
+            # shard the CONTRACTING d_model dim on model — partial
+            # projections + a small all-reduce beat 16x replicated GEMMs.
+            if name == "wo":
+                if self.heads_shardable:
+                    return lead((mh, dm))
+                return lead((self.model if _div(leaf.shape[-2],
+                                                self.model_size) else None,
+                             None))
+            shardable = self.heads_shardable if name == "wq" \
+                else self.kv_shardable
+            if shardable:
+                return lead((dm, mh if name == "wq" else mkv))
+            return lead((self.model if _div(c.d_model, self.model_size)
+                         else None, None))
+        if name == "router":
+            return lead((dm, None))
+        if name in ("w_gate", "w_up"):        # mlp (D,F) or moe (E,D,F)
+            return lead((dm, mf))
+        if name == "w_down":                  # (F,D) or (E,F,D)
+            return lead((mf, dm))
+        if name == "w_in":                    # mamba (D, X) — X mixed split
+            return lead((dm, None))
+        if name == "w_out":                   # mamba/mlstm (d_inner, D)
+            return lead((mi, dm))
+        if name == "w_qkv":                   # mlstm (d_inner, 3*d_inner)
+            return lead((None, mi))
+        if name == "w_if":
+            return lead((None, None))
+        if name == "w_gates" or name == "r_gates":   # slstm (D, 4D)
+            return lead((dm, mi if _div(4 * c.d_model, self.model_size)
+                         else None))
+        # norms, biases, conv weights, scalars: replicated
+        return P(*([None] * rank))
+
+    def param_specs(self, params: Any):
+        return jax.tree_util.tree_map_with_path(
+            lambda kp, leaf: self._leaf_spec(
+                tuple(getattr(k, "key", getattr(k, "name", str(k)))
+                      for k in kp), leaf),
+            params)
+
+    # -- activation / data specs ----------------------------------------------
+    def _bshard(self, batch: int):
+        """Batch axis spec, falling back to replication when indivisible
+        (e.g. long_500k's global_batch=1)."""
+        need = self.data_size * (2 if self.multi_pod else 1)
+        return self.batch if _div(batch, need) else None
+
+    def tokens_spec(self, batch: int = 0) -> P:
+        b = self._bshard(batch) if batch else self.batch
+        return P(b, None)
+
+    def logits_spec(self, batch: int = 0) -> P:
+        b = self._bshard(batch) if batch else self.batch
+        return P(b, None,
+                 self.model if _div(self.cfg.padded_vocab, self.model_size)
+                 else None)
+
+    def encoder_spec(self, batch: int = 0) -> P:
+        b = self._bshard(batch) if batch else self.batch
+        return P(b, None, None)
+
+    # -- decode cache specs -----------------------------------------------------
+    def cache_specs(self, caches: Any, batch: int) -> Any:
+        """KV caches: (L, B, S, hkv, hd) -> batch on data if divisible,
+        else cache-seq on model (sequence-sharded decode)."""
+        bshard = self.batch if _div(batch, self.data_size *
+                                    (2 if self.multi_pod else 1)) else None
+
+        def spec(kp, leaf) -> P:
+            name = str(kp[-1].key) if hasattr(kp[-1], "key") else str(kp[-1])
+            rank = leaf.ndim
+            if name in ("k", "v"):            # (L, B, S, hkv, hd)
+                seq_shard = self.model if _div(leaf.shape[2],
+                                               self.model_size) else None
+                return P(None, bshard, seq_shard, None, None)
+            if name == "C":                   # (G, k, B, H, hd, hd)
+                return P(None, None, bshard, None,
+                         self.model if _div(leaf.shape[-2], self.model_size)
+                         else None, None)
+            if name == "ssm":                 # (G, k, B, H, N, P)
+                return P(None, None, bshard, None, None, None)
+            if name in ("conv", "n", "m", "c", "h"):
+                lead = [None] * (rank - 1)
+                # batch is the 3rd axis for stacked states, 2nd otherwise
+                specs = [None] * rank
+                for i, s in enumerate(leaf.shape):
+                    if s == batch:
+                        specs[i] = bshard
+                        break
+                return P(*specs)
+            if name == "index":
+                return P(*([None] * rank))
+            return P(*([None] * rank))
+
+        return jax.tree_util.tree_map_with_path(spec, caches)

@@ -1,0 +1,92 @@
+"""Checkpointing: atomic, resumable, elastic (mesh-shape independent).
+
+Design for 1000+ nodes (scaled down to run anywhere):
+  * params/opt state are saved as *logical* (unsharded) arrays per leaf —
+    restore can target ANY mesh shape (elastic rescale after node loss);
+    on a real cluster each host writes its shard and the logical view is
+    reassembled at restore (here: single-process, full arrays).
+  * atomic commit: write to ``step_N.tmp/`` then rename — a preempted
+    writer never corrupts the latest checkpoint.
+  * the data-pipeline cursor (step, epoch, rng) is saved alongside so a
+    restart skips ahead deterministically (no repeated batches).
+  * ``latest_step`` scans for the newest *committed* checkpoint.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(ckpt_dir: str | pathlib.Path, step: int, params: Any,
+                    opt_state: Any, data_state: Optional[dict] = None):
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    tmp = ckpt_dir / f"step_{step}.tmp"
+    final = ckpt_dir / f"step_{step}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    np.savez(tmp / "params.npz", **_flatten(params))
+    np.savez(tmp / "opt_state.npz", **_flatten(opt_state))
+    meta = {"step": step, "data_state": data_state or {}}
+    (tmp / "meta.json").write_text(json.dumps(meta))
+    os.replace(tmp, final)                      # atomic commit
+    return final
+
+
+def latest_step(ckpt_dir: str | pathlib.Path) -> Optional[int]:
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in ckpt_dir.glob("step_*")
+             if not p.name.endswith(".tmp") and (p / "meta.json").exists()]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str | pathlib.Path, step: int,
+                       params_like: Any, opt_like: Any,
+                       sharding_fn=None) -> tuple[Any, Any, dict]:
+    """Restore into the structure of ``params_like`` / ``opt_like``.
+
+    ``sharding_fn(path_key, array)`` may re-device-put each leaf — this is
+    the elastic-rescale hook: the same checkpoint restores onto a
+    different mesh by supplying that mesh's shardings.
+    """
+    ckpt_dir = pathlib.Path(ckpt_dir) / f"step_{step}"
+    pflat = np.load(ckpt_dir / "params.npz")
+    oflat = np.load(ckpt_dir / "opt_state.npz")
+    meta = json.loads((ckpt_dir / "meta.json").read_text())
+
+    def rebuild(tree_like: Any, flat) -> Any:
+        paths, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+        leaves = []
+        for path, like in paths:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path)
+            arr = flat[key]
+            assert arr.shape == like.shape, (key, arr.shape, like.shape)
+            if sharding_fn is not None:
+                leaves.append(sharding_fn(key, arr))
+            else:
+                leaves.append(jnp.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    return (rebuild(params_like, pflat), rebuild(opt_like, oflat),
+            meta["data_state"])

@@ -1,0 +1,82 @@
+"""Training step factory: loss + grad + AdamW, remat and microbatching.
+
+``make_train_step(cfg, opt_cfg, ...)`` returns a pure function
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` suitable
+for ``jax.jit`` with explicit in/out shardings (see launch/dryrun.py).
+
+Microbatching (grad accumulation) runs the forward/backward over
+``microbatches`` slices with a lax.scan — the standard memory/perf knob
+at 4k x 256 batch scale.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from .optimizer import OptimizerConfig, adamw_update
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  vocab_size: int) -> jnp.ndarray:
+    """Mean CE over tokens; logits in any dtype, reduction in f32.
+
+    Labels >= vocab_size (padding ids) are masked out.
+    """
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0) & (labels < vocab_size)
+    loss = jnp.where(mask, lse - gold, 0.0)
+    return loss.sum() / jnp.maximum(mask.sum(), 1)
+
+
+def make_loss_fn(cfg: ModelConfig, remat: bool = True, logits_spec=None):
+    def loss_fn(params, batch):
+        logits = lm.forward(params, cfg, batch["tokens"],
+                            encoder_input=batch.get("frames"),
+                            remat=remat)
+        if logits_spec is not None:
+            logits = jax.lax.with_sharding_constraint(logits, logits_spec)
+        return cross_entropy(logits[:, :-1], batch["tokens"][:, 1:],
+                             cfg.vocab_size)
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig,
+                    opt_cfg: OptimizerConfig = OptimizerConfig(),
+                    microbatches: int = 1, remat: bool = True,
+                    logits_spec=None):
+    loss_fn = make_loss_fn(cfg, remat, logits_spec)
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def train_step(params, opt_state, batch):
+        if microbatches <= 1:
+            loss, grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc(carry, mb):
+                loss_i, g_i = grad_fn(params, mb)
+                g_acc, l_acc = carry
+                return (jax.tree.map(jnp.add, g_acc, g_i), l_acc + loss_i), None
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+            (gsum, lsum), _ = jax.lax.scan(acc, (zero, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+        new_params, new_state, metrics = adamw_update(opt_cfg, params,
+                                                      grads, opt_state)
+        metrics["loss"] = loss
+        return new_params, new_state, metrics
+
+    return train_step

@@ -1,0 +1,92 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train
+step + decode-vs-forward consistency, on CPU."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import lm
+from repro.train.optimizer import OptimizerConfig, init_opt_state
+from repro.train.step import make_train_step
+
+
+def _setup(arch):
+    cfg = get_config(arch).reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 32
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                cfg.vocab_size)
+    enc = None
+    if cfg.is_encdec:
+        enc = jax.random.normal(jax.random.PRNGKey(2),
+                                (B, cfg.encoder_seq, cfg.d_model))
+    return cfg, params, tokens, enc
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg, params, tokens, enc = _setup(arch)
+    logits = lm.forward(params, cfg, tokens, encoder_input=enc)
+    assert logits.shape == (2, 32, cfg.padded_vocab)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step(arch):
+    cfg, params, tokens, enc = _setup(arch)
+    step = make_train_step(cfg, OptimizerConfig(lr=1e-4), remat=False)
+    opt = init_opt_state(params)
+    batch = {"tokens": tokens}
+    if enc is not None:
+        batch["frames"] = enc
+    new_params, new_opt, metrics = jax.jit(step)(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(new_opt["step"]) == 1
+    # params actually moved
+    delta = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(lambda p, q: float(jnp.sum(jnp.abs(p - q))),
+                     params, new_params))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ["internlm2_1_8b", "qwen3_8b",
+                                  "mixtral_8x22b", "zamba2_2_7b",
+                                  "xlstm_1_3b", "whisper_medium"])
+def test_decode_matches_forward(arch):
+    """Teacher-forced decode must reproduce full-forward logits.
+
+    This pins the KV-cache / recurrent-state step implementations to the
+    parallel (training) formulation — the strongest cross-check we have
+    for Mamba2 chunked SSD and mLSTM chunked scan vs their O(1) steps.
+    """
+    cfg, params, tokens, enc = _setup(arch)
+    B, S = tokens.shape
+    # decode consumes PROCESSED encoder states (computed once at prefill)
+    enc_b = lm.encode(params, cfg, enc) if enc is not None else None
+    full = lm.forward(params, cfg, tokens, encoder_input=enc)
+    caches = lm.init_caches(cfg, B, S)
+    outs = []
+    for i in range(S):
+        lg, caches = lm.decode_step(params, cfg, tokens[:, i:i + 1], caches,
+                                    jnp.array(i), encoder_states=enc_b)
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    # bf16 accumulation differences across formulations: compare top-1
+    # agreement + correlation rather than exact allclose
+    top_full = jnp.argmax(full, -1)
+    top_dec = jnp.argmax(dec, -1)
+    agree = float((top_full == top_dec).mean())
+    corr = np.corrcoef(np.asarray(full, np.float32).ravel(),
+                       np.asarray(dec, np.float32).ravel())[0, 1]
+    if cfg.n_experts:
+        # MoE capacity dropping differs between S-token forward (cap =
+        # 1.25*S*k/E per row) and 1-token decode (never drops): top-1 on a
+        # random-init model flips near-ties; correlation pins the math.
+        assert agree > 0.7, agree
+        assert corr > 0.9, corr   # capacity drops perturb random-init logits
+    else:
+        assert agree > 0.95, agree
+        assert corr > 0.98, corr

@@ -1,0 +1,89 @@
+"""Crossbar functional-model tests: bit-sliced GEMM exactness + noise."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CrossbarConfig, crossbar_matmul, crossbar_linear, \
+    quantize_symmetric
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:  # pragma: no cover
+    HAVE_HYP = False
+
+
+@pytest.mark.parametrize("rows,k,n,m", [
+    (256, 100, 32, 4), (256, 256, 64, 2), (128, 300, 16, 3), (511, 511, 8, 2),
+])
+def test_exact_int8_gemm(rows, k, n, m):
+    """ADC digitization is exact when chunk rows <= 2^adc_bits - 1."""
+    key = jax.random.PRNGKey(rows + k + n)
+    x = jax.random.randint(key, (m, k), -128, 128, dtype=jnp.int32)
+    w = jax.random.randint(jax.random.PRNGKey(1), (k, n), -128, 128,
+                           dtype=jnp.int32)
+    cfg = CrossbarConfig(rows=rows)
+    y = crossbar_matmul(x, w, cfg)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x @ w))
+
+
+def test_adc_saturation_is_bounded():
+    """A full 512-row all-ones plane clips by exactly 1 LSB per plane pair."""
+    cfg = CrossbarConfig(rows=512)
+    x = jnp.full((1, 512), 1, dtype=jnp.int32)       # bit 0 plane all ones
+    w = jnp.full((512, 1), 1, dtype=jnp.int32)
+    y = crossbar_matmul(x, w, cfg)
+    exact = 512
+    assert exact - int(y[0, 0]) in (0, 1)
+
+
+def test_noise_model_scales_with_sigma():
+    """Read noise perturbs outputs, monotonically in sigma (paper §II-B:
+    read noise is what forces 1-bit cells in large arrays)."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.randint(key, (8, 256), -128, 128, dtype=jnp.int32)
+    w = jax.random.randint(jax.random.PRNGKey(1), (256, 32), -128, 128,
+                           dtype=jnp.int32)
+    ref = np.abs(np.asarray(x @ w)).mean()
+    rels = []
+    for sigma in (0.5, 2.0):
+        cfg = CrossbarConfig(rows=256, noise_sigma_thermal=sigma)
+        y = crossbar_matmul(x, w, cfg, noise_key=jax.random.PRNGKey(7))
+        err = np.abs(np.asarray(y) - np.asarray(x @ w)).mean()
+        rels.append(err / max(ref, 1.0))
+    assert rels[0] > 0              # noise did something
+    assert rels[0] < rels[1]        # monotone in sigma
+    assert rels[0] < 0.25, rels
+
+
+def test_quantized_linear_close_to_fp():
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (16, 200))
+    w = jax.random.normal(jax.random.PRNGKey(4), (200, 48)) / 14.0
+    y = crossbar_linear(x, w, CrossbarConfig(rows=256))
+    ref = x @ w
+    rel = float(jnp.linalg.norm(y - ref) / jnp.linalg.norm(ref))
+    assert rel < 0.02, rel
+
+
+def test_quantize_symmetric_roundtrip():
+    x = jnp.array([-1.0, -0.5, 0.0, 0.25, 1.0])
+    q, s = quantize_symmetric(x, 8)
+    assert int(q.max()) <= 127 and int(q.min()) >= -128
+    np.testing.assert_allclose(np.asarray(q * s), np.asarray(x), atol=float(s))
+
+
+if HAVE_HYP:
+    @given(k=st.integers(1, 300), n=st.integers(1, 48),
+           seed=st.integers(0, 2**16))
+    @settings(max_examples=25, deadline=None)
+    def test_property_exactness(k, n, seed):
+        """Property: crossbar GEMM == int GEMM for any shape (<=255 rows)."""
+        key = jax.random.PRNGKey(seed)
+        x = jax.random.randint(key, (2, k), -128, 128, dtype=jnp.int32)
+        w = jax.random.randint(jax.random.PRNGKey(seed + 1), (k, n),
+                               -128, 128, dtype=jnp.int32)
+        y = crossbar_matmul(x, w, CrossbarConfig(rows=255, adc_bits=8))
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(x @ w))

@@ -1,0 +1,78 @@
+"""Algorithm 1/2 + BAS legality property tests."""
+
+import pytest
+
+from repro.core import (ArrayConfig, FBRequest, check_legal,
+                        decode_sequence_pair, fb_relative_positioning,
+                        fb_size_balancing, place_fbs, schedule_array)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:  # pragma: no cover
+    HAVE_HYP = False
+
+
+def _reqs(specs):
+    return [FBRequest(kind=k, layer=f"l{i}", req_rows=r, req_cols=c,
+                      n_vectors=v, window=w)
+            for i, (k, r, c, v, w) in enumerate(specs)]
+
+
+def test_positioning_consumer_below_producer():
+    reqs = _reqs([("conv", 100, 200, 10, 1), ("max", 20, 64, 4, 4)])
+    seq1, seq2 = fb_relative_positioning(reqs, {1: 0})
+    # consumer after producer in seq1, before in seq2  => BELOW
+    assert seq1.index(1) > seq1.index(0)
+    assert seq2.index(1) < seq2.index(0)
+    coords = decode_sequence_pair(seq1, seq2, [(100, 200), (20, 64)])
+    assert coords[1][0] >= 100          # row0 of consumer below producer
+
+
+def test_positioning_independent_right():
+    reqs = _reqs([("conv", 100, 200, 10, 1), ("conv", 50, 60, 4, 1)])
+    seq1, seq2 = fb_relative_positioning(reqs, {})
+    coords = decode_sequence_pair(seq1, seq2, [(100, 200), (50, 60)])
+    assert coords[1][1] >= 200          # col0 of second right of first
+
+
+def test_size_balancing_fits_and_legal():
+    reqs = _reqs([("conv", 480, 512, 256, 1), ("res", 8, 512, 1, 1),
+                  ("max", 26, 256, 64, 4)])
+    consumes = {1: 0, 2: 1}
+    blocks = fb_size_balancing(reqs, 512, 512, consumes)
+    placed = place_fbs(blocks, consumes)
+    check_legal(placed, ArrayConfig())   # raises on overlap / out of bounds
+
+
+def test_schedule_array_pipelined_faster_than_serial():
+    reqs = _reqs([("conv", 256, 512, 128, 1), ("relu", 18, 128, 128, 2)])
+    consumes = {1: 0}
+    blocks = place_fbs(fb_size_balancing(reqs, 512, 512, consumes), consumes)
+    pip = schedule_array(blocks, ArrayConfig(), pipelined=True)
+    ser = schedule_array(blocks, ArrayConfig(), pipelined=False)
+    assert pip.makespan_cycles < ser.makespan_cycles
+    assert 0 < pip.temporal_utilization <= 1
+    assert 0 < pip.spatial_utilization <= 1
+
+
+if HAVE_HYP:
+    _kind = st.sampled_from(["conv", "max", "relu", "res"])
+
+    @given(st.lists(st.tuples(_kind, st.integers(1, 500),
+                              st.integers(1, 500), st.integers(1, 64),
+                              st.integers(1, 9)),
+                    min_size=1, max_size=5))
+    @settings(max_examples=40, deadline=None)
+    def test_property_balanced_placement_always_legal(specs):
+        """Any FB chain sized by Alg 2 and placed by Alg 1 is legal."""
+        # first block is the GEMM head; chain each FB to the previous
+        specs = [("conv",) + specs[0][1:]] + specs[1:]
+        reqs = _reqs(specs)
+        consumes = {i: i - 1 for i in range(1, len(reqs))}
+        blocks = fb_size_balancing(reqs, 512, 512, consumes)
+        placed = place_fbs(blocks, consumes)
+        check_legal(placed, ArrayConfig())
+        sched = schedule_array(placed, ArrayConfig())
+        assert sched.makespan_cycles > 0
+        assert 0 <= sched.temporal_utilization <= 1
