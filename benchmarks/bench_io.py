@@ -1,0 +1,45 @@
+"""Benchmark result persistence: ``BENCH_<section>.json`` writers.
+
+Each section's rows (``(name, us_per_call, derived)`` tuples) are written
+to ``BENCH_<section>.json`` at the repo root so future PRs can diff
+per-kernel timings against the committed trajectory.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import platform
+from typing import Iterable, Tuple
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+Row = Tuple[str, float, float]
+
+
+def bench_json_path(section: str, out_dir: str | None = None) -> str:
+    return os.path.join(out_dir or _REPO_ROOT, f"BENCH_{section}.json")
+
+
+def write_bench_json(section: str, rows: Iterable[Row],
+                     out_dir: str | None = None) -> str:
+    """Write one section's rows to BENCH_<section>.json; returns the path."""
+    import jax
+    payload = {
+        "section": section,
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "entries": {name: {"us_per_call": round(us, 1),
+                           "derived": derived}
+                    for name, us, derived in rows},
+    }
+    path = bench_json_path(section, out_dir)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def read_bench_json(section: str, out_dir: str | None = None) -> dict:
+    with open(bench_json_path(section, out_dir)) as f:
+        return json.load(f)

@@ -1,5 +1,9 @@
 """Pallas kernel microbenches (interpret mode on CPU; derived = rel-err
-vs oracle, proving the kernels stay correct at bench shapes)."""
+vs oracle, proving the kernels stay correct at bench shapes).
+
+``us_per_call`` is steady-state: one warm-up call pays tracing/compile,
+then the timed calls measure execution only — comparable across PRs.
+"""
 
 from __future__ import annotations
 
@@ -12,10 +16,12 @@ import numpy as np
 from repro.kernels import ops, ref
 
 
-def _t(fn):
+def _t(fn, iters: int = 3):
+    out = jax.block_until_ready(fn())          # warm-up: trace + compile
     t0 = time.perf_counter()
-    out = jax.block_until_ready(fn())
-    return out, (time.perf_counter() - t0) * 1e6
+    for _ in range(iters):
+        out = jax.block_until_ready(fn())
+    return out, (time.perf_counter() - t0) / iters * 1e6
 
 
 def run():
@@ -25,10 +31,23 @@ def run():
     x = jax.random.randint(key, (128, 512), -128, 128).astype(jnp.int8)
     w = jax.random.randint(jax.random.PRNGKey(1), (512, 256),
                            -128, 128).astype(jnp.int8)
+    # seed-comparable entry (same name/shape/config as the 64-dot seed
+    # bench): auto-dispatch takes the clip-free exact fast path at
+    # 256 rows / 9-bit ADC
+    oracle256 = np.asarray(ref.crossbar_gemm_ref(x, w, rows=256))
     y, us = _t(lambda: ops.crossbar_matmul_int8(x, w, rows=256))
-    err = float(np.abs(np.asarray(y)
-                       - np.asarray(ref.crossbar_gemm_ref(x, w, rows=256))).max())
+    err = float(np.abs(np.asarray(y) - oracle256).max())
     rows.append(("kernels/crossbar_gemm/128x512x256", us, err))
+    # plane-packed faithful sliced path, forced (exact=False)
+    y, us = _t(lambda: ops.crossbar_matmul_int8(x, w, rows=256, exact=False))
+    err = float(np.abs(np.asarray(y) - oracle256).max())
+    rows.append(("kernels/crossbar_gemm/sliced/128x512x256", us, err))
+    # the paper-default 512-row array with its 9-bit ADC (clip possible
+    # only at the measure-zero all-ones count, so the sliced path runs)
+    y, us = _t(lambda: ops.crossbar_matmul_int8(x, w, rows=512))
+    err = float(np.abs(np.asarray(y)
+                       - np.asarray(ref.crossbar_gemm_ref(x, w, rows=512))).max())
+    rows.append(("kernels/crossbar_gemm/sliced/rows512_adc9", us, err))
 
     q = jax.random.normal(key, (1, 512, 4, 64), jnp.float32)
     k = jax.random.normal(jax.random.PRNGKey(2), (1, 512, 4, 64), jnp.float32)

@@ -4,30 +4,49 @@ Prints ``name,us_per_call,derived`` CSV.  Sections:
   paper_figs    — HURRY Figs 6/7/8 + accuracy (simulator-derived)
   kernels_bench — Pallas kernel microbenches (interpret mode on CPU)
   lm_step       — LM train/serve step wall-times on reduced configs
+
+``--section kernels`` (etc.) runs one section only; the kernels section
+also persists its rows to ``BENCH_kernels.json`` (see ``bench_io``) so
+future PRs can diff per-kernel timings.
 """
 
 from __future__ import annotations
 
-import sys
+import argparse
+
+SECTIONS = ("all", "paper", "kernels", "lm")
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--section", choices=SECTIONS, default="all")
+    args = ap.parse_args(argv)
+
     rows = []
-    from benchmarks import fig1_tradeoff, paper_figs
-    for fn in fig1_tradeoff.ALL:
-        rows.extend(fn())
-    for fn in paper_figs.ALL:
-        rows.extend(fn())
-    try:
-        from benchmarks import kernels_bench
-        rows.extend(kernels_bench.run())
-    except ImportError:
-        pass
-    try:
-        from benchmarks import lm_step
-        rows.extend(lm_step.run())
-    except ImportError:
-        pass
+    if args.section in ("all", "paper"):
+        from benchmarks import fig1_tradeoff, paper_figs
+        for fn in fig1_tradeoff.ALL:
+            rows.extend(fn())
+        for fn in paper_figs.ALL:
+            rows.extend(fn())
+    # optional sections are skipped on ImportError only under the "all"
+    # default; an explicitly requested section must propagate failures
+    if args.section in ("all", "kernels"):
+        try:
+            from benchmarks import bench_io, kernels_bench
+            krows = kernels_bench.run()
+            bench_io.write_bench_json("kernels", krows)
+            rows.extend(krows)
+        except ImportError:
+            if args.section == "kernels":
+                raise
+    if args.section in ("all", "lm"):
+        try:
+            from benchmarks import lm_step
+            rows.extend(lm_step.run())
+        except ImportError:
+            if args.section == "lm":
+                raise
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:

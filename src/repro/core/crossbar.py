@@ -19,6 +19,22 @@ This is the faithful compute model of HURRY's in-situ array (paper §II):
 Everything is vectorized jnp and jit-friendly.  An optional Gaussian
 read-noise model (thermal + shot + RTN, paper §IV-A1) perturbs the analog
 count before ADC rounding; this drives the accuracy-drop experiment.
+
+Compute paths (statically dispatched per config, see DESIGN.md):
+
+* **Exact fast path** — when every row chunk has at most ``2^adc_bits - 1``
+  rows and read noise is off, no bitline count can exceed the ADC range,
+  clipping is a provable no-op, and the whole bit-sliced pipeline is
+  bit-identical to one plain int32 GEMM (after two's-complement wrapping
+  to the configured bit widths).  ``CrossbarConfig.clip_free`` is the
+  predicate; noise presence is checked per call.
+* **Plane-packed sliced path** — the faithful route whenever clipping or
+  noise can occur.  Input bit planes are stacked along M and weight
+  planes along N so the per-chunk counts come from one batched
+  ``(C, Bi*M, R) x (C, R, Bw*N)`` matmul instead of a 5-D
+  ``(Bi, Bw, C, M, N)`` einsum; ADC noise+clip apply elementwise to the
+  packed counts (each bitline is still digitized independently), and
+  shift-and-add is a single weighted contraction.
 """
 
 from __future__ import annotations
@@ -60,6 +76,23 @@ class CrossbarConfig:
         # bit-serial phases per input value.
         return -(-self.input_bits // self.dac_bits)
 
+    @property
+    def clip_free(self) -> bool:
+        """True iff ADC clipping can never fire (count <= rows <= adc_max).
+
+        With 1-bit cells a bitline count is a sum of at most ``rows``
+        {0,1} products, so ``rows <= 2^adc_bits - 1`` makes digitization
+        exact and the bit-sliced pipeline equal to a plain int GEMM.
+        ``crossbar_matmul`` refines this per call: a chunk also holds at
+        most K rows, so ``K <= adc_max`` is equally clip-free.
+        """
+        return self.rows <= self.adc_max
+
+    def has_noise(self, noise_key) -> bool:
+        """True iff the read-noise model perturbs counts for this call."""
+        return noise_key is not None and (self.noise_sigma_thermal > 0
+                                          or self.noise_sigma_shot > 0)
+
 
 def _twos_complement_planes(v: jnp.ndarray, bits: int) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Decompose signed ints into (planes, plane_weights).
@@ -74,10 +107,17 @@ def _twos_complement_planes(v: jnp.ndarray, bits: int) -> tuple[jnp.ndarray, jnp
     return planes, w
 
 
+def _wrap_signed(v: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Two's-complement wrap to ``bits`` — what plane decomposition +
+    MSB-negative recombination computes for any int input."""
+    half = 1 << (bits - 1)
+    return ((v.astype(jnp.int32) + half) & ((1 << bits) - 1)) - half
+
+
 def _adc(count: jnp.ndarray, cfg: CrossbarConfig,
          noise_key: Optional[jax.Array]) -> jnp.ndarray:
     """Digitize an analog bitline count with optional read noise."""
-    if noise_key is not None and (cfg.noise_sigma_thermal > 0 or cfg.noise_sigma_shot > 0):
+    if cfg.has_noise(noise_key):
         sigma = cfg.noise_sigma_thermal + cfg.noise_sigma_shot * jnp.sqrt(
             jnp.maximum(count.astype(jnp.float32), 0.0))
         noisy = count.astype(jnp.float32) + sigma * jax.random.normal(
@@ -94,31 +134,56 @@ def crossbar_matmul(x: jnp.ndarray, w: jnp.ndarray, cfg: CrossbarConfig = Crossb
     K is split into row-chunks of ``cfg.rows``; partial sums are combined
     digitally by the shift-and-add units (SnA), exactly as HURRY/ISAAC do
     across stacked arrays.
+
+    Statically dispatches the clip-free exact fast path (one int32 GEMM)
+    when no chunk can saturate the ADC and read noise is off; otherwise
+    runs the faithful plane-packed sliced path (see module docstring).
+    Both are bit-identical wherever they overlap.
     """
     assert x.ndim >= 1 and w.ndim == 2
     K, N = w.shape
     lead = x.shape[:-1]
     x2 = x.reshape((-1, K)).astype(jnp.int32)
+    M = x2.shape[0]
+
+    # Exact fast path: counts <= min(rows, K) <= adc_max means the ADC
+    # digitizes every bitline exactly, so bit slicing + SnA collapses to a
+    # plain int GEMM over the two's-complement-wrapped operands.
+    if (cfg.clip_free or K <= cfg.adc_max) and not cfg.has_noise(noise_key):
+        y = jax.lax.dot_general(
+            _wrap_signed(x2, cfg.input_bits), _wrap_signed(w, cfg.weight_bits),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+        return y.reshape(*lead, N)
 
     xp, xs = _twos_complement_planes(x2, cfg.input_bits)     # (Bi, M, K)
     wp, ws = _twos_complement_planes(w, cfg.weight_bits)     # (Bw, K, N)
+    Bi, Bw = cfg.input_bits, cfg.weight_bits
 
     n_chunks = -(-K // cfg.rows)
     pad = n_chunks * cfg.rows - K
     if pad:
         xp = jnp.pad(xp, ((0, 0), (0, 0), (0, pad)))
         wp = jnp.pad(wp, ((0, 0), (0, pad), (0, 0)))
-    # (Bi, M, C, R) and (Bw, C, R, N)
-    xp = xp.reshape(cfg.input_bits, x2.shape[0], n_chunks, cfg.rows)
-    wp = wp.reshape(cfg.weight_bits, n_chunks, cfg.rows, N)
+    # plane-packed operands: input planes stacked along M, weight planes
+    # along N — (C, Bi*M, R) x (C, R, Bw*N), one batched matmul over chunks
+    xp = (xp.reshape(Bi, M, n_chunks, cfg.rows)
+          .transpose(2, 0, 1, 3).reshape(n_chunks, Bi * M, cfg.rows))
+    wp = (wp.reshape(Bw, n_chunks, cfg.rows, N)
+          .transpose(1, 2, 0, 3).reshape(n_chunks, cfg.rows, Bw * N))
 
-    # Analog count per (input-bit, weight-bit, chunk): each is one array read.
-    # einsum over the row dimension only -> non-negative counts <= rows.
-    counts = jnp.einsum("imcr,wcrn->iwcmn", xp, wp)
-    counts = _adc(counts, cfg, noise_key)
-    # SnA recombination (digital, exact).
+    # Analog count per (chunk, input-bit x row-vec, weight-bit x col): each
+    # (i, j, c) block is one array read; values are non-negative <= rows.
+    # f32 matmul is exact for {0,1} products with counts <= rows << 2^24
+    # and hits the fast matmul path (int32 contractions have none on CPU).
+    counts = jnp.einsum("cmr,crn->cmn", xp.astype(jnp.float32),
+                        wp.astype(jnp.float32))
+    counts = _adc(counts, cfg, noise_key).astype(jnp.int32)
+    # SnA recombination (digital, exact): weighted contraction over planes
+    # and chunks in int32 (partial sums can exceed 2^24); the reshape only
+    # splits the packed axes back out.
     scale = (xs[:, None] * ws[None, :]).astype(jnp.int32)    # (Bi, Bw)
-    y = jnp.einsum("iwcmn,iw->mn", counts, scale)
+    y = jnp.einsum("cimwn,iw->mn",
+                   counts.reshape(n_chunks, Bi, M, Bw, N), scale)
     return y.reshape(*lead, N)
 
 

@@ -8,8 +8,31 @@ becomes an int32 MXU accumulation over {0,1} planes; the row-chunking
 that ReRAM does across stacked arrays becomes the K-grid dimension, and
 ADC saturation applies per chunk exactly as per array.
 
-Grid: (M/bm, N/bn, K/rows) — K blocks are the "arrays"; the 8x8 plane
-loop runs in-register per tile.
+Two statically-dispatched compute paths (DESIGN.md §"Exact fast path"):
+
+* **Plane-packed sliced path** (the faithful route): the 8 input bit
+  planes are stacked along the M axis and the 8 weight bit planes along
+  the N axis, so each tile performs ONE ``(8*bm, rows) x (rows, 8*bn)``
+  int32 ``dot_general`` instead of 64 separate plane-pair dots.  The
+  resulting ``(8*bm, 8*bn)`` counts block is clipped to the ADC range in
+  one vectorized op, then recombined with a single weighted contraction
+  against the ``s_i * s_j`` shift-and-add scale table.  Bit-slice
+  recombination is linear digital post-processing (ISAAC lineage /
+  FPSA), so batching the plane loop this way is semantics-preserving:
+  every bitline count is still digitized independently before SnA.
+
+* **Exact fast path** (``exact=True`` or auto-detected): when
+  ``rows <= 2^adc_bits - 1`` each plane-pair chunk count — a sum of at
+  most ``rows`` products of {0,1} bits — is already within ADC range,
+  so the clip is a provable no-op and the whole pipeline collapses to a
+  plain int8 -> int32 GEMM accumulated over K chunks.  This is
+  bit-identical to the sliced path (HURRY's own 512-row / 9-bit pairing
+  is clip-free except for ``rows == 512 == 2^9``; see
+  ``clip_possible``).  When clipping *can* fire the fast path is
+  refused and the sliced path runs.
+
+Grid: (M/bm, N/bn, K/rows) — K blocks are the "arrays"; both paths do a
+single MXU dispatch per tile.
 """
 
 from __future__ import annotations
@@ -21,30 +44,78 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+def _plane_weights(shape, dim):
+    """Two's-complement plane weights 2^i (MSB negative) along ``dim``.
 
-def _kernel(x_ref, w_ref, o_ref, acc_ref, *, adc_max: int, n_k: int):
+    Built from iota arithmetic because Pallas kernels cannot capture
+    array constants, and 1D iota fails on TPU.
+    """
+    i = jax.lax.broadcasted_iota(jnp.int32, shape, dim)
+    return jnp.where(i == 7, jnp.int32(-128), jnp.left_shift(jnp.int32(1), i))
+
+
+def clip_possible(rows: int, adc_bits: int) -> bool:
+    """True iff an ADC clip can ever fire for ``rows``-row chunks.
+
+    A bitline count is ``sum_row x_bit * w_bit`` over at most ``rows``
+    1-bit products, hence ``count <= rows``; the ADC digitizes
+    ``[0, 2^adc_bits - 1]`` exactly.  Clipping is therefore impossible —
+    and the bit-sliced pipeline exactly equals a plain int GEMM — iff
+    ``rows <= 2^adc_bits - 1``.
+    """
+    return rows > (1 << adc_bits) - 1
+
+
+def _kernel_sliced(x_ref, w_ref, o_ref, acc_ref, *, adc_max: int, n_k: int):
+    """Plane-packed faithful path: 1 MXU dot per tile for all 64 planes."""
     ki = pl.program_id(2)
 
     @pl.when(ki == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    xu = x_ref[...].astype(jnp.int32) & 0xFF
-    wu = w_ref[...].astype(jnp.int32) & 0xFF
-    acc = acc_ref[...]
-    for i in range(8):
-        xb = ((xu >> i) & 1)
-        sx = -(1 << i) if i == 7 else (1 << i)
-        for j in range(8):
-            wb = ((wu >> j) & 1)
-            sw = -(1 << j) if j == 7 else (1 << j)
-            # analog bitline count for this (input-bit, weight-bit) plane
-            counts = jax.lax.dot_general(
-                xb, wb, (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.int32)
-            counts = jnp.clip(counts, 0, adc_max)      # ADC digitization
-            acc = acc + (sx * sw) * counts             # shift-and-add
-    acc_ref[...] = acc
+    xu = x_ref[...].astype(jnp.int32) & 0xFF            # (bm, R)
+    wu = w_ref[...].astype(jnp.int32) & 0xFF            # (R, bn)
+    bm, rows = xu.shape
+    bn = wu.shape[1]
+    # (1D iota fails on TPU — broadcast the bit index to the full rank)
+    xbits = jax.lax.broadcasted_iota(jnp.int32, (8, 1, 1), 0)
+    wbits = jax.lax.broadcasted_iota(jnp.int32, (1, 8, 1), 1)
+    # input planes stacked along M: (8, bm, R) -> (8*bm, R)
+    xb = ((xu[None, :, :] >> xbits) & 1).reshape(8 * bm, rows)
+    # weight planes stacked along N: (R, 8, bn) -> (R, 8*bn)
+    wb = ((wu[:, None, :] >> wbits) & 1).reshape(rows, 8 * bn)
+    # All 64 analog bitline count blocks in ONE MXU pass.  f32 is exact
+    # here — {0,1} products, counts <= rows << 2^24 — and hits the fast
+    # matmul path on every backend (int32 dot has none on CPU).
+    counts = jax.lax.dot_general(
+        xb.astype(jnp.float32), wb.astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    counts = jnp.clip(counts, 0, adc_max)               # ADC digitization
+    # SnA partial sums can exceed 2^24, so recombine in int32.
+    counts = counts.astype(jnp.int32).reshape(8, bm, 8, bn)
+    # SnA recombination table s_i * s_j, one weighted contraction over planes
+    scale = (_plane_weights((8, 1, 1, 1), 0)
+             * _plane_weights((1, 1, 8, 1), 2))
+    acc_ref[...] += (counts * scale).sum(axis=(0, 2))
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...]
+
+
+def _kernel_exact(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+    """Clip-free fast path: plain int8 -> int32 GEMM, no bit slicing."""
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...].astype(jnp.int32), w_ref[...].astype(jnp.int32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
 
     @pl.when(ki == n_k - 1)
     def _done():
@@ -52,11 +123,19 @@ def _kernel(x_ref, w_ref, o_ref, acc_ref, *, adc_max: int, n_k: int):
 
 
 @functools.partial(jax.jit, static_argnames=("adc_bits", "rows", "block_m",
-                                             "block_n", "interpret"))
+                                             "block_n", "interpret", "exact"))
 def crossbar_gemm(x: jnp.ndarray, w: jnp.ndarray, *, adc_bits: int = 9,
                   rows: int = 512, block_m: int = 128, block_n: int = 128,
-                  interpret: bool = False) -> jnp.ndarray:
-    """(M, K) int8 x (K, N) int8 -> (M, N) int32 with HURRY semantics."""
+                  interpret: bool = False,
+                  exact: bool | None = None) -> jnp.ndarray:
+    """(M, K) int8 x (K, N) int8 -> (M, N) int32 with HURRY semantics.
+
+    ``exact=None`` (default) auto-dispatches: the clip-free single-GEMM
+    fast path when ``rows <= 2^adc_bits - 1`` (bit-identical, see
+    ``clip_possible``), else the plane-packed sliced path.  ``exact=False``
+    forces the faithful sliced path; ``exact=True`` asserts clip-freeness
+    and raises if ADC saturation could fire.
+    """
     assert x.dtype == jnp.int8 and w.dtype == jnp.int8
     M, K = x.shape
     Kw, N = w.shape
@@ -66,7 +145,17 @@ def crossbar_gemm(x: jnp.ndarray, w: jnp.ndarray, *, adc_bits: int = 9,
     rows = min(rows, K)
     assert M % block_m == 0 and N % block_n == 0 and K % rows == 0
     n_k = K // rows
-    kernel = functools.partial(_kernel, adc_max=(1 << adc_bits) - 1, n_k=n_k)
+    if exact is None:
+        exact = not clip_possible(rows, adc_bits)
+    elif exact and clip_possible(rows, adc_bits):
+        raise ValueError(
+            f"exact=True but ADC clipping can fire: rows={rows} > "
+            f"2^{adc_bits} - 1 = {(1 << adc_bits) - 1}; use the sliced path")
+    if exact:
+        kernel = functools.partial(_kernel_exact, n_k=n_k)
+    else:
+        kernel = functools.partial(_kernel_sliced,
+                                   adc_max=(1 << adc_bits) - 1, n_k=n_k)
     return pl.pallas_call(
         kernel,
         grid=(M // block_m, N // block_n, n_k),

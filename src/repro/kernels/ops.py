@@ -2,7 +2,8 @@
 
 On CPU (this container) the kernels run in interpret mode — the kernel
 body executes in Python for correctness validation; on TPU they compile
-to Mosaic.  ``INTERPRET`` auto-detects the backend.
+to Mosaic.  ``INTERPRET`` auto-detects the backend lazily (a module
+``__getattr__``), so selecting a backend after import is respected.
 """
 
 from __future__ import annotations
@@ -10,17 +11,30 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .crossbar_gemm import crossbar_gemm
+from .crossbar_gemm import clip_possible, crossbar_gemm
 from .flash_attention import flash_attention
 from .fused_gemm_epilogue import fused_gemm_epilogue
 from .packed_gemm import packed_gemm, pad_groups, tile_group_map
 
-INTERPRET = jax.default_backend() == "cpu"
+
+def interpret_default() -> bool:
+    """Interpret-mode default for the current backend (looked up per call,
+    not frozen at import time)."""
+    return jax.default_backend() == "cpu"
 
 
-def crossbar_matmul_int8(x, w, *, adc_bits: int = 9, rows: int = 512):
-    return crossbar_gemm(x, w, adc_bits=adc_bits, rows=rows,
-                         interpret=INTERPRET)
+def __getattr__(name: str):
+    if name == "INTERPRET":  # kept as a lazy attribute for back-compat
+        return interpret_default()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def crossbar_matmul_int8(x, w, *, adc_bits: int = 9, rows: int = 512,
+                         exact: bool | None = None):
+    """HURRY crossbar GEMM; ``exact=None`` auto-takes the clip-free fast
+    path when ``rows <= 2^adc_bits - 1`` (see ``clip_possible``)."""
+    return crossbar_gemm(x, w, adc_bits=adc_bits, rows=rows, exact=exact,
+                         interpret=interpret_default())
 
 
 def attention(q, k, v, *, causal: bool = True, window: int = 0,
@@ -34,30 +48,31 @@ def attention(q, k, v, *, causal: bool = True, window: int = 0,
         v = jnp.repeat(v, rep, axis=2)
     return flash_attention(q, k, v, causal=causal, window=window,
                            block_q=block_q, block_k=block_k,
-                           interpret=INTERPRET)
+                           interpret=interpret_default())
 
 
 def linear_fused(x, w, b, residual=None, *, act: str = "silu"):
     return fused_gemm_epilogue(x, w, b, residual, act=act,
-                               interpret=INTERPRET)
+                               interpret=interpret_default())
 
 
 def grouped_gemm(x, w, group_sizes, *, block_m: int = 128,
                  block_n: int = 128):
-    """Convenience wrapper: pad groups, build the tile map, run, unpad."""
-    xp, padded_sizes, row_index = pad_groups(x, group_sizes, block_m)
+    """Convenience wrapper: pad groups, build the tile map, run, unpad.
+
+    The unpad is a pure jnp gather over the inverse permutation that
+    ``pad_groups`` planned host-side once — no per-call host sync.
+    """
+    xp, padded_sizes, row_index, inv_index = pad_groups(x, group_sizes,
+                                                        block_m)
     n_tiles = xp.shape[0] // block_m
     gids = tile_group_map(padded_sizes, block_m, n_tiles)
     yp = packed_gemm(xp, w, gids, block_m=block_m, block_n=block_n,
-                     interpret=INTERPRET)
-    # unpad back to the original row order
-    import numpy as np
-    idx = np.asarray(row_index)
-    inv = np.full((x.shape[0],), 0, np.int32)
-    inv[idx[idx >= 0]] = np.arange(len(idx))[idx >= 0]
-    return yp[jnp.asarray(inv)]
+                     interpret=interpret_default())
+    return yp[inv_index]
 
 
 __all__ = ["crossbar_matmul_int8", "attention", "linear_fused",
            "grouped_gemm", "packed_gemm", "pad_groups", "tile_group_map",
-           "flash_attention", "fused_gemm_epilogue", "crossbar_gemm"]
+           "flash_attention", "fused_gemm_epilogue", "crossbar_gemm",
+           "clip_possible", "interpret_default", "INTERPRET"]

@@ -45,8 +45,11 @@ def tile_group_map(group_sizes, block_m: int, n_tiles: int) -> jnp.ndarray:
 def pad_groups(x: jnp.ndarray, group_sizes, block_m: int):
     """Pad each group's rows to a multiple of block_m (zero rows).
 
-    Returns (x_padded, padded_sizes, row_index) where ``row_index`` maps
-    padded rows back to original rows (-1 for padding).
+    Returns (x_padded, padded_sizes, row_index, inv_index):
+    ``row_index`` maps padded rows back to original rows (-1 for
+    padding); ``inv_index`` is its inverse (original row -> padded row),
+    planned host-side here once so callers can unpad with a pure jnp
+    gather instead of rebuilding the permutation per call.
     """
     import numpy as np
     sizes = np.asarray(group_sizes)
@@ -58,9 +61,12 @@ def pad_groups(x: jnp.ndarray, group_sizes, block_m: int):
     for g, (st, sz, pd) in enumerate(zip(starts, sizes, padded)):
         row_index[o:o + sz] = np.arange(st, st + sz)
         o += pd
+    inv = np.zeros((x.shape[0],), np.int32)
+    inv[row_index[row_index >= 0]] = np.arange(out_rows)[row_index >= 0]
     idx = jnp.asarray(row_index)
     xp = jnp.where(idx[:, None] >= 0, x[jnp.maximum(idx, 0)], 0)
-    return xp.astype(x.dtype), jnp.asarray(padded, jnp.int32), idx
+    return (xp.astype(x.dtype), jnp.asarray(padded, jnp.int32), idx,
+            jnp.asarray(inv))
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n",

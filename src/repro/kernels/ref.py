@@ -52,6 +52,13 @@ def crossbar_gemm_ref(x: jnp.ndarray, w: jnp.ndarray, *,
     return out
 
 
+def crossbar_gemm_exact_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Plain int8 -> int32 GEMM: what the crossbar pipeline must equal
+    whenever no chunk can saturate the ADC (``rows <= 2^adc_bits - 1``)."""
+    return jnp.dot(x.astype(jnp.int32), w.astype(jnp.int32),
+                   preferred_element_type=jnp.int32)
+
+
 # ---------------------------------------------------------------------------
 # packed_gemm: grouped (block-diagonal) GEMM — BAS block packing analogue
 # ---------------------------------------------------------------------------

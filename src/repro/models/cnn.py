@@ -29,6 +29,12 @@ def fp_matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
 
 def make_crossbar_matmul(cfg: Optional[CrossbarConfig] = None,
                          noise_key: Optional[jax.Array] = None) -> MatmulFn:
+    """Route model GEMMs through the crossbar functional model.
+
+    ``crossbar_matmul`` statically dispatches per config (DESIGN.md §4):
+    clip-free + no-noise runs as one exact int GEMM; noisy or saturating
+    configs take the faithful plane-packed sliced path.
+    """
     cfg = cfg or CrossbarConfig()
 
     def mm(x, w):

@@ -1,0 +1,115 @@
+"""Plane-packed + exact-fast-path coverage: both new crossbar compute
+routes must be bit-exact vs the 64-dot oracle, and the fast path must be
+refused whenever ADC clipping (or read noise) can fire."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CrossbarConfig, crossbar_matmul
+from repro.kernels import ops, ref
+from repro.kernels.crossbar_gemm import clip_possible
+
+# rows x adc_bits sweep from the issue: {256, 511, 512} x {8, 9}.
+# clip-free (exact fast path eligible): (256, 9), (511, 9) only.
+SWEEP = [(256, 9), (511, 9), (512, 9), (256, 8), (511, 8), (512, 8)]
+
+
+def _data(rows, n=64, m=32, chunks=2, seed=0):
+    k = rows * chunks
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed + rows))
+    x = jax.random.randint(kx, (m, k), -128, 128).astype(jnp.int8)
+    w = jax.random.randint(kw, (k, n), -128, 128).astype(jnp.int8)
+    return x, w
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rows,adc", SWEEP)
+def test_plane_packed_kernel_bit_exact(rows, adc):
+    x, w = _data(rows)
+    yr = ref.crossbar_gemm_ref(x, w, adc_bits=adc, rows=rows)
+    ys = ops.crossbar_gemm(x, w, adc_bits=adc, rows=rows, exact=False,
+                           interpret=True)
+    np.testing.assert_array_equal(np.asarray(ys), np.asarray(yr))
+
+
+@pytest.mark.parametrize("rows,adc", SWEEP)
+def test_auto_dispatch_kernel_bit_exact(rows, adc):
+    """Auto dispatch (exact where clip-free, sliced otherwise) == oracle."""
+    x, w = _data(rows, seed=7)
+    yr = ref.crossbar_gemm_ref(x, w, adc_bits=adc, rows=rows)
+    ya = ops.crossbar_gemm(x, w, adc_bits=adc, rows=rows, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ya), np.asarray(yr))
+
+
+@pytest.mark.parametrize("rows,adc", [(256, 9), (511, 9)])
+def test_exact_fast_path_equals_plain_gemm(rows, adc):
+    """Clip-free configs: fast path == sliced path == plain int GEMM."""
+    assert not clip_possible(rows, adc)
+    x, w = _data(rows)
+    ye = ops.crossbar_gemm(x, w, adc_bits=adc, rows=rows, exact=True,
+                           interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(ye), np.asarray(ref.crossbar_gemm_exact_ref(x, w)))
+    np.testing.assert_array_equal(
+        np.asarray(ye),
+        np.asarray(ops.crossbar_gemm(x, w, adc_bits=adc, rows=rows,
+                                     exact=False, interpret=True)))
+
+
+def test_fast_path_refused_when_clipping_fires():
+    """512 rows / 8-bit ADC with all-ones operands: every (0,0)-plane
+    count is 512 > 255, so clipping fires, exact=True must raise, and the
+    dispatched result must show saturation (NOT the plain-GEMM value)."""
+    rows, adc = 512, 8
+    assert clip_possible(rows, adc)
+    x = jnp.ones((8, rows), jnp.int8)
+    w = jnp.ones((rows, 16), jnp.int8)
+    with pytest.raises(ValueError, match="clipping can fire"):
+        ops.crossbar_gemm(x, w, adc_bits=adc, rows=rows, exact=True,
+                          interpret=True)
+    y = ops.crossbar_gemm(x, w, adc_bits=adc, rows=rows, interpret=True)
+    yr = ref.crossbar_gemm_ref(x, w, adc_bits=adc, rows=rows)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+    assert int(y[0, 0]) == 255            # saturated ADC count, not 512
+    assert int(ref.crossbar_gemm_exact_ref(x, w)[0, 0]) == 512
+
+
+# ---------------------------------------------------------------------------
+# jnp functional model
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rows,adc", SWEEP)
+def test_model_matches_kernel_oracle(rows, adc):
+    """crossbar_matmul (with its internal dispatch) == the kernel oracle
+    at matching 8-bit input/weight configs."""
+    x, w = _data(rows, seed=3)
+    cfg = CrossbarConfig(rows=rows, adc_bits=adc)
+    y = crossbar_matmul(x.astype(jnp.int32), w.astype(jnp.int32), cfg)
+    yr = ref.crossbar_gemm_ref(x, w, adc_bits=adc, rows=rows)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+
+
+def test_model_fast_path_not_taken_with_noise():
+    """Read noise forces the faithful sliced path even when clip-free:
+    the output must actually be perturbed, not silently exact."""
+    cfg = CrossbarConfig(rows=256, adc_bits=9, noise_sigma_thermal=2.0)
+    assert cfg.clip_free
+    key = jax.random.PRNGKey(0)
+    x = jax.random.randint(key, (8, 256), -128, 128, dtype=jnp.int32)
+    w = jax.random.randint(jax.random.PRNGKey(1), (256, 32), -128, 128,
+                           dtype=jnp.int32)
+    y = crossbar_matmul(x, w, cfg, noise_key=jax.random.PRNGKey(7))
+    assert np.abs(np.asarray(y) - np.asarray(x @ w)).max() > 0
+
+
+def test_model_clipping_saturates():
+    cfg = CrossbarConfig(rows=512, adc_bits=8)
+    assert not cfg.clip_free
+    x = jnp.ones((1, 512), jnp.int32)
+    w = jnp.ones((512, 1), jnp.int32)
+    assert int(crossbar_matmul(x, w, cfg)[0, 0]) == 255
