@@ -14,6 +14,9 @@ from typing import Iterable, Tuple
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+# registered persisted sections -> BENCH_<section>.json at the repo root
+SECTIONS = ("kernels", "program")
+
 Row = Tuple[str, float, float]
 
 
@@ -25,6 +28,9 @@ def write_bench_json(section: str, rows: Iterable[Row],
                      out_dir: str | None = None) -> str:
     """Write one section's rows to BENCH_<section>.json; returns the path."""
     import jax
+    if section not in SECTIONS:
+        raise ValueError(f"unregistered bench section {section!r}; "
+                         f"add it to bench_io.SECTIONS ({SECTIONS})")
     payload = {
         "section": section,
         "backend": jax.default_backend(),

@@ -1,0 +1,49 @@
+"""Compiled-program serving benchmark (compile once, execute per batch).
+
+One ``make_server`` per CNN (the compile + jit cost is paid once and
+excluded), then steady-state µs per request batch through the full
+crossbar program — every GEMM on the ``crossbar_gemm`` Pallas kernel,
+every post-op on the fused ``fb_epilogue`` kernel (interpret mode on
+CPU).  ``derived`` is the argmax agreement against the functional-model
+forward under the same clip-free config, which DESIGN.md §5 requires to
+be 1.0 (the two paths are bit-identical there).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.crossbar import CrossbarConfig
+from repro.models.cnn import CNN_MODELS, make_crossbar_matmul
+from repro.program import make_server
+
+NETS = ("alexnet", "resnet18", "vgg16")
+BATCH = 2
+
+
+def _t(fn, iters: int = 2):
+    out = jax.block_until_ready(fn())          # warm-up: trace + compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn())
+    return out, (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rows = []
+    cfg = CrossbarConfig(rows=511)             # clip-free (DESIGN.md §4)
+    x = jax.random.normal(jax.random.PRNGKey(0), (BATCH, 32, 32, 3))
+    for net in NETS:
+        m = CNN_MODELS[net]
+        params = m.init(jax.random.PRNGKey(1))
+        server = make_server(net, params, cfg=cfg, return_logits=True)
+        y_prog, us = _t(lambda: server(x))
+        y_ref = jax.jit(lambda p, v: m.forward(
+            p, v, mm=make_crossbar_matmul(cfg)))(params, x)
+        agree = float((np.argmax(np.asarray(y_prog), 1)
+                       == np.argmax(np.asarray(y_ref), 1)).mean())
+        rows.append((f"program/{net}/b{BATCH}", us, agree))
+    return rows

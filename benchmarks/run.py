@@ -3,18 +3,19 @@
 Prints ``name,us_per_call,derived`` CSV.  Sections:
   paper_figs    — HURRY Figs 6/7/8 + accuracy (simulator-derived)
   kernels_bench — Pallas kernel microbenches (interpret mode on CPU)
+  program_bench — compiled-program serving (compile once, us per batch)
   lm_step       — LM train/serve step wall-times on reduced configs
 
-``--section kernels`` (etc.) runs one section only; the kernels section
-also persists its rows to ``BENCH_kernels.json`` (see ``bench_io``) so
-future PRs can diff per-kernel timings.
+``--section kernels`` (etc.) runs one section only; the kernels and
+program sections also persist their rows to ``BENCH_<section>.json``
+(see ``bench_io``) so future PRs can diff timings.
 """
 
 from __future__ import annotations
 
 import argparse
 
-SECTIONS = ("all", "paper", "kernels", "lm")
+SECTIONS = ("all", "paper", "kernels", "program", "lm")
 
 
 def main(argv: list[str] | None = None) -> None:
@@ -39,6 +40,15 @@ def main(argv: list[str] | None = None) -> None:
             rows.extend(krows)
         except ImportError:
             if args.section == "kernels":
+                raise
+    if args.section in ("all", "program"):
+        try:
+            from benchmarks import bench_io, program_bench
+            prows = program_bench.run()
+            bench_io.write_bench_json("program", prows)
+            rows.extend(prows)
+        except ImportError:
+            if args.section == "program":
                 raise
     if args.section in ("all", "lm"):
         try:

@@ -11,8 +11,9 @@ Public surface:
 from .crossbar import (CrossbarConfig, crossbar_matmul, crossbar_linear,
                        quantize_symmetric)
 from .functional_blocks import FBRequest, FunctionalBlock
-from .scheduling import (fb_relative_positioning, fb_size_balancing,
-                         decode_sequence_pair, place_fbs, balance_feasible)
+from .scheduling import (ArrayPlan, fb_relative_positioning,
+                         fb_size_balancing, decode_sequence_pair, place_fbs,
+                         plan_array, balance_feasible)
 from .bas import ArrayConfig, ArraySchedule, schedule_array, check_legal
 from .simulator import ChipConfig, SimReport, simulate_hurry
 from .baselines import BaselineConfig, simulate_isaac, simulate_misca
@@ -21,8 +22,8 @@ from .workload import WORKLOADS, LayerSpec, layer_groups
 __all__ = [
     "CrossbarConfig", "crossbar_matmul", "crossbar_linear", "quantize_symmetric",
     "FBRequest", "FunctionalBlock",
-    "fb_relative_positioning", "fb_size_balancing", "decode_sequence_pair",
-    "place_fbs", "balance_feasible",
+    "ArrayPlan", "fb_relative_positioning", "fb_size_balancing",
+    "decode_sequence_pair", "place_fbs", "plan_array", "balance_feasible",
     "ArrayConfig", "ArraySchedule", "schedule_array", "check_legal",
     "ChipConfig", "SimReport", "simulate_hurry",
     "BaselineConfig", "simulate_isaac", "simulate_misca",

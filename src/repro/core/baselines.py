@@ -93,8 +93,13 @@ def _run_baseline(name: str, layers: list[LayerSpec], chip: BaselineConfig,
     snas = 0.0
     move_total = 0.0
     prev_out_bytes = 3 * 32 * 32
+    group_out: dict[str, float] = {}   # group-final layer -> out_bytes
     for group in layer_groups(layers):
         head = group[0]
+        # graph-aware input traffic (ResNet shortcut wiring), as in
+        # simulate_hurry — both architectures stream the true producer
+        in_bytes = (group_out.get(head.input_from, prev_out_bytes)
+                    if head.input_from else prev_out_bytes)
         s = pick_size(head)
         adc_bits = adc_bits_for(s, chip.cell_bits)
         n_arr, mapped, alloc, gemm_cyc, samples, drives = _gemm_layer_model(
@@ -112,7 +117,7 @@ def _run_baseline(name: str, layers: list[LayerSpec], chip: BaselineConfig,
             write_cycles=s,                       # columns per static array
             write_overlapped=False,               # cannot read while writing
             dig_ops=dig_ops, move_bytes=move_bytes,
-            in_bytes=prev_out_bytes, out_bytes=out_bytes,
+            in_bytes=in_bytes, out_bytes=out_bytes,
             arrays_per_replica=max(1, math.ceil(n_arr * s * s
                                                 / (chip.array_rows
                                                    * chip.array_cols))),
@@ -125,6 +130,7 @@ def _run_baseline(name: str, layers: list[LayerSpec], chip: BaselineConfig,
         dacs += drives
         snas += samples
         move_total += move_bytes
+        group_out[group[-1].name] = out_bytes
         prev_out_bytes = out_bytes
 
     ecfg = ExecConfig(n_slots=chip.n_arrays,

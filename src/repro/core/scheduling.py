@@ -192,11 +192,73 @@ def fb_size_balancing(requests: Sequence[FBRequest],
             for i in range(n)]
 
 
-def place_fbs(blocks: Sequence[FunctionalBlock],
-              consumes: dict[int, int]) -> list[FunctionalBlock]:
-    """Run Algorithm 1 + sequence-pair decode, return placed FBs."""
+def _decode_place(blocks: Sequence[FunctionalBlock],
+                  consumes: dict[int, int]
+                  ) -> tuple[tuple[FunctionalBlock, ...],
+                             tuple[int, ...], tuple[int, ...]]:
+    """Algorithm 1 + sequence-pair decode -> (placed FBs, seq1, seq2)."""
     reqs = [b.request for b in blocks]
     seq1, seq2 = fb_relative_positioning(reqs, consumes)
     coords = decode_sequence_pair(seq1, seq2, [(b.rows, b.cols) for b in blocks])
-    return [dataclasses.replace(b, row0=coords[i][0], col0=coords[i][1])
-            for i, b in enumerate(blocks)]
+    placed = tuple(dataclasses.replace(b, row0=coords[i][0], col0=coords[i][1])
+                   for i, b in enumerate(blocks))
+    return placed, tuple(seq1), tuple(seq2)
+
+
+def place_fbs(blocks: Sequence[FunctionalBlock],
+              consumes: dict[int, int]) -> list[FunctionalBlock]:
+    """Run Algorithm 1 + sequence-pair decode, return placed FBs."""
+    return list(_decode_place(blocks, consumes)[0])
+
+
+# ---------------------------------------------------------------------------
+# ArrayPlan — the decoded plan of one array, the structure every consumer
+# (simulator, program compiler, visualizers) reads instead of re-running
+# the sequence-pair decode themselves.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ArrayPlan:
+    """One array's sized + placed FB chain with the decoded coordinates.
+
+    ``blocks`` carry Algorithm 2's sizes and the sequence-pair decode's
+    (row0, col0) origins; ``seq1``/``seq2`` are Algorithm 1's sequence
+    pair, exported so the relative-position constraints stay inspectable
+    alongside the absolute coordinates.
+    """
+
+    name: str
+    arr_rows: int
+    arr_cols: int
+    blocks: tuple[FunctionalBlock, ...]
+    seq1: tuple[int, ...]
+    seq2: tuple[int, ...]
+
+    @property
+    def coords(self) -> tuple[tuple[int, int], ...]:
+        """Decoded (row0, col0) per FB, in request order (y grows downward)."""
+        return tuple((b.row0, b.col0) for b in self.blocks)
+
+    @property
+    def sizes(self) -> tuple[tuple[int, int], ...]:
+        """Balanced (rows, cols) per FB, in request order."""
+        return tuple((b.rows, b.cols) for b in self.blocks)
+
+    def block_of(self, *kinds: str) -> FunctionalBlock | None:
+        """First placed FB whose kind is in ``kinds`` (e.g. "conv", "fc")."""
+        for b in self.blocks:
+            if b.kind in kinds:
+                return b
+        return None
+
+
+def plan_array(requests: Sequence[FBRequest],
+               arr_rows: int = 512, arr_cols: int = 512,
+               consumes: dict[int, int] | None = None,
+               name: str = "array") -> ArrayPlan:
+    """Algorithm 2 sizing + Algorithm 1 placement -> one ``ArrayPlan``."""
+    consumes = consumes or {}
+    blocks = fb_size_balancing(requests, arr_rows, arr_cols, consumes)
+    placed, seq1, seq2 = _decode_place(blocks, consumes)
+    return ArrayPlan(name=name, arr_rows=arr_rows, arr_cols=arr_cols,
+                     blocks=placed, seq1=seq1, seq2=seq2)

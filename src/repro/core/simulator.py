@@ -29,7 +29,7 @@ from .bas import ArrayConfig, schedule_array
 from .energy import EnergyLedger, EnergyModel, adc_bits_for
 from .execution import ExecConfig, ExecResult, LayerExec, run_layers
 from .functional_blocks import FBRequest, tournament_rounds
-from .scheduling import fb_size_balancing, place_fbs
+from .scheduling import plan_array
 from .workload import LayerSpec, layer_groups
 
 
@@ -203,11 +203,17 @@ def simulate_hurry(layers: list[LayerSpec], chip: ChipConfig = ChipConfig(),
     snas = 0.0
     input_write_cells = 0.0
     prev_out_bytes = 3 * 32 * 32
+    group_out: dict[str, float] = {}   # group-final layer -> out_bytes
     for group in layer_groups(layers):
         reqs, consumes, head = build_group_requests(group, chip)
-        blocks = fb_size_balancing(reqs, chip.array_rows, chip.array_cols,
-                                   consumes)
-        blocks = place_fbs(blocks, consumes)
+        # graph-aware input traffic: a layer with explicit wiring (e.g. a
+        # ResNet shortcut projection, or conv1 beside it) streams its
+        # true producer's output, not the previous group's
+        in_bytes = (group_out.get(head.input_from, prev_out_bytes)
+                    if head.input_from else prev_out_bytes)
+        plan = plan_array(reqs, chip.array_rows, chip.array_cols, consumes,
+                          name=head.name)
+        blocks = plan.blocks
         sched = schedule_array(blocks, acfg, name=head.name, pipelined=True)
         conv_fb = blocks[0]
         n_arrays = (math.ceil(max(head.gemm_rows, 1) / conv_fb.rows)
@@ -243,7 +249,7 @@ def simulate_hurry(layers: list[LayerSpec], chip: ChipConfig = ChipConfig(),
             write_cells=weight_cells,
             write_cycles=conv_fb.cols,           # columns written per array,
             write_overlapped=True,               # in parallel across arrays
-            in_bytes=prev_out_bytes, out_bytes=out_bytes,
+            in_bytes=in_bytes, out_bytes=out_bytes,
             arrays_per_replica=n_arrays,
             max_replicas=max(1, head.n_vectors),
             mapped_cells=mapped * n_arrays, alloc_cells=bbox * n_arrays,
@@ -251,6 +257,7 @@ def simulate_hurry(layers: list[LayerSpec], chip: ChipConfig = ChipConfig(),
             adc_bits=adc_bits,
             adc_active_cycles=gemm_active * n_arrays,
             lut_ops=lut_ops))
+        group_out[group[-1].name] = out_bytes
         prev_out_bytes = out_bytes
 
     ecfg = ExecConfig(n_slots=chip.n_arrays,

@@ -25,7 +25,9 @@ class LayerSpec:
     out_hw: int = 0
     features_in: int = 0       # fc
     features_out: int = 0
-    residual_from: str = ""
+    residual_from: str = ""    # layer whose OUTPUT is the residual addend
+    input_from: str = ""       # layer whose output this one consumes
+                               # ("" = the immediately preceding layer)
 
     # -- workload numbers used by mapping/cycle models ----------------------
     @property
@@ -131,20 +133,32 @@ def resnet18_cifar() -> list[LayerSpec]:
     c0 = _conv("conv0", 3, 64, 32)
     ls += [c0, _relu("relu0", c0)]
     hw, in_ch = 32, 64
+    entry = "relu0"            # block input = previous block's output
     for stage, (ch, blocks) in enumerate([(64, 2), (128, 2), (256, 2), (512, 2)]):
         for b in range(blocks):
             s = 2 if (stage > 0 and b == 0) else 1
             n = f"s{stage}b{b}"
-            ca = _conv(f"{n}_conv1", in_ch, ch, hw, s=s)
+            res_src = entry    # identity shortcut unless a projection exists
+            if in_ch != ch:
+                # 1x1 projection on the shortcut (its own GEMM group)
+                proj = dataclasses.replace(
+                    _conv(f"{n}_proj", in_ch, ch, hw, k=1, s=s, p=0),
+                    input_from=entry)
+                ls.append(proj)
+                res_src = proj.name
+            ca = dataclasses.replace(_conv(f"{n}_conv1", in_ch, ch, hw, s=s),
+                                     input_from=entry)
             hw = ca.out_hw
             ls += [ca, _relu(f"{n}_relu1", ca)]
             cb = _conv(f"{n}_conv2", ch, ch, hw)
             ls += [cb,
                    LayerSpec(f"{n}_res", "residual", out_ch=ch, out_hw=hw,
-                             residual_from=f"{n}_conv1"),
+                             residual_from=res_src),
                    _relu(f"{n}_relu2", cb)]
             in_ch = ch
-    ls += [LayerSpec("avgpool", "avgpool", out_ch=512, ksize=4, in_hw=4, out_hw=1),
+            entry = f"{n}_relu2"
+    ls += [LayerSpec("avgpool", "avgpool", out_ch=512, ksize=4, stride=4,
+                     in_hw=4, out_hw=1),
            _fc("fc", 512, 10), LayerSpec("softmax", "softmax", features_out=10)]
     return ls
 

@@ -1,0 +1,124 @@
+"""Fused functional-block epilogue Pallas kernel (HURRY FB post-ops).
+
+The numeric analogue of HURRY's in-array functional blocks (paper §II-C):
+after the crossbar GEMM (`crossbar_gemm.py`) produces an int32 tile, the
+consumer FBs — shift-and-add requantization, bias, residual merge (Fig
+4a), ReLU/max-pool tournaments (Fig 4b/c), softmax (Eq. 1) — execute in
+ONE pass while the tile is still VMEM-resident, so the GEMM output never
+round-trips through a separate jnp op.  This extends
+`fused_gemm_epilogue.py` (which fuses fp GEMM + activation) to the
+crossbar's int32 -> f32 dequant chain and to window reductions.
+
+Op order is the canonical FB chain order (the only order the paper's
+workloads produce, validated by the program compiler):
+
+    dequant (SnA scale) -> + bias -> + residual -> ReLU
+        -> max/avg pool window  OR  softmax
+
+Pooling layout: rows of the (M, N) GEMM output are im2col vectors in
+(image, row, col) order, so one grid step owns one image's ``ih*ih`` rows
+and reduces ``window x window`` blocks via a leading-axis reshape — the
+column-parallel window tiling of Fig 5c.  Only ``stride == window``
+(non-overlapping) pooling is supported, which covers the paper's
+workloads (2x2/2 max pool, 4x4/4 global avg pool).  Softmax needs the
+full feature axis in-tile, so ``block_n`` is forced to N in that mode.
+
+Block sizes must divide (M, N) exactly — the program executor picks
+divisor blocks; on TPU proper, multiples of (8, 128) pick the fast path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(y_ref, scale_ref, b_ref, res_ref, o_ref, *, act: str, pool: str,
+            window: int, img_hw: int, softmax: bool, has_residual: bool):
+    y = (y_ref[...].astype(jnp.float32) * scale_ref[0, 0]
+         + b_ref[...].astype(jnp.float32))
+    if has_residual:
+        y = y + res_ref[...].astype(jnp.float32)
+    if act == "relu":
+        y = jnp.maximum(y, 0.0)
+    if pool != "none":
+        oh = img_hw // window
+        bn = y.shape[-1]
+        y = y.reshape(oh, window, oh, window, bn)
+        y = jnp.max(y, axis=(1, 3)) if pool == "max" else jnp.mean(y, axis=(1, 3))
+        y = y.reshape(oh * oh, bn)
+    if softmax:
+        m = jnp.max(y, axis=-1, keepdims=True)
+        e = jnp.exp(y - m)
+        y = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = y
+
+
+@functools.partial(jax.jit, static_argnames=("act", "pool", "window",
+                                             "img_hw", "softmax", "block_m",
+                                             "block_n", "interpret"))
+def fb_epilogue(y: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+                residual: jnp.ndarray | None = None, *, act: str = "none",
+                pool: str = "none", window: int = 0, img_hw: int = 0,
+                softmax: bool = False, block_m: int = 256,
+                block_n: int = 128, interpret: bool = False) -> jnp.ndarray:
+    """y (M, N) int32 crossbar output -> fused FB chain -> f32.
+
+    ``scale`` is the (1, 1) f32 shift-and-add requant factor (input scale
+    x weight scale); ``bias`` is (N,).  ``act`` in {"none", "relu"};
+    ``pool`` in {"none", "max", "avg"} with ``window == stride`` over an
+    ``img_hw x img_hw`` spatial grid per image (M = B * img_hw^2); pool
+    output is (B * (img_hw//window)^2, N).  ``softmax=True`` (exclusive
+    with pool) normalizes over the full feature axis -> (M, N).
+    """
+    M, N = y.shape
+    assert scale.shape == (1, 1) and bias.shape == (N,)
+    assert act in ("none", "relu") and pool in ("none", "max", "avg")
+    has_residual = residual is not None
+    res = residual if has_residual else jnp.zeros((1, 1), jnp.float32)
+
+    if pool != "none":
+        assert not softmax, "pool and softmax FBs never chain directly"
+        assert window > 1 and img_hw % window == 0, (img_hw, window)
+        img_rows = img_hw * img_hw
+        assert M % img_rows == 0, (M, img_hw)
+        n_img = M // img_rows
+        oh = img_hw // window
+        block_n = min(block_n, N)
+        assert N % block_n == 0, (N, block_n)
+        grid = (n_img, N // block_n)
+        row_spec = pl.BlockSpec((img_rows, block_n), lambda i, j: (i, j))
+        out_spec = pl.BlockSpec((oh * oh, block_n), lambda i, j: (i, j))
+        out_shape = jax.ShapeDtypeStruct((n_img * oh * oh, N), jnp.float32)
+    else:
+        if softmax:
+            block_n = N          # the tournament needs every logit in-tile
+        block_m = min(block_m, M)
+        block_n = min(block_n, N)
+        assert M % block_m == 0 and N % block_n == 0, (M, N, block_m, block_n)
+        grid = (M // block_m, N // block_n)
+        row_spec = pl.BlockSpec((block_m, block_n), lambda i, j: (i, j))
+        out_spec = row_spec
+        out_shape = jax.ShapeDtypeStruct((M, N), jnp.float32)
+
+    res_spec = (row_spec if has_residual
+                else pl.BlockSpec((1, 1), lambda i, j: (0, 0)))
+    kernel = functools.partial(_kernel, act=act, pool=pool, window=window,
+                               img_hw=img_hw, softmax=softmax,
+                               has_residual=has_residual)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            row_spec,
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+            res_spec,
+        ],
+        out_specs=out_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(y, scale, bias, res)

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from .crossbar_gemm import clip_possible, crossbar_gemm
+from .fb_epilogue import fb_epilogue
 from .flash_attention import flash_attention
 from .fused_gemm_epilogue import fused_gemm_epilogue
 from .packed_gemm import packed_gemm, pad_groups, tile_group_map
@@ -56,6 +57,13 @@ def linear_fused(x, w, b, residual=None, *, act: str = "silu"):
                                interpret=interpret_default())
 
 
+def fb_postops(y, scale, bias, residual=None, **kw):
+    """Fused FB epilogue over an int32 crossbar GEMM output; kwargs as
+    ``fb_epilogue`` (act/pool/window/img_hw/softmax/block sizes)."""
+    return fb_epilogue(y, scale, bias, residual,
+                       interpret=interpret_default(), **kw)
+
+
 def grouped_gemm(x, w, group_sizes, *, block_m: int = 128,
                  block_n: int = 128):
     """Convenience wrapper: pad groups, build the tile map, run, unpad.
@@ -72,7 +80,7 @@ def grouped_gemm(x, w, group_sizes, *, block_m: int = 128,
     return yp[inv_index]
 
 
-__all__ = ["crossbar_matmul_int8", "attention", "linear_fused",
+__all__ = ["crossbar_matmul_int8", "attention", "linear_fused", "fb_postops",
            "grouped_gemm", "packed_gemm", "pad_groups", "tile_group_map",
-           "flash_attention", "fused_gemm_epilogue", "crossbar_gemm",
-           "clip_possible", "interpret_default", "INTERPRET"]
+           "flash_attention", "fused_gemm_epilogue", "fb_epilogue",
+           "crossbar_gemm", "clip_possible", "interpret_default", "INTERPRET"]

@@ -101,6 +101,45 @@ def fused_gemm_epilogue_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# fb_epilogue: fused FB chain over the int32 crossbar GEMM output
+# ---------------------------------------------------------------------------
+
+def fb_epilogue_ref(y: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+                    residual: jnp.ndarray | None = None, *,
+                    act: str = "none", pool: str = "none", window: int = 0,
+                    img_hw: int = 0, softmax: bool = False) -> jnp.ndarray:
+    """The unfused jnp composition the fb_epilogue kernel must equal:
+    dequant -> +bias -> +residual -> ReLU -> pool window | softmax,
+    written with the same ops the functional CNN forward uses
+    (``reduce_window`` max pool, window-mean avg pool, jax.nn.softmax).
+    """
+    M, N = y.shape
+    out = y.astype(jnp.float32) * scale.reshape(()) + bias.astype(jnp.float32)
+    if residual is not None:
+        out = out + residual.astype(jnp.float32)
+    if act == "relu":
+        out = jax.nn.relu(out)
+    elif act != "none":
+        raise ValueError(act)
+    if pool != "none":
+        b = M // (img_hw * img_hw)
+        x4 = out.reshape(b, img_hw, img_hw, N)
+        if pool == "max":
+            x4 = jax.lax.reduce_window(x4, -jnp.inf, jax.lax.max,
+                                       (1, window, window, 1),
+                                       (1, window, window, 1), "VALID")
+        elif pool == "avg":
+            oh = img_hw // window
+            x4 = x4.reshape(b, oh, window, oh, window, N).mean(axis=(2, 4))
+        else:
+            raise ValueError(pool)
+        out = x4.reshape(-1, N)
+    if softmax:
+        out = jax.nn.softmax(out, axis=-1)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # flash_attention: Eq. 1 online-stabilized softmax attention
 # ---------------------------------------------------------------------------
 

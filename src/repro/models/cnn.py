@@ -6,7 +6,9 @@ functional model (`repro.core.crossbar_linear`, int8 bit-sliced with
 optional read noise) — that is how the simulator's accuracy claims are
 computed rather than assumed.  Layer shapes mirror
 ``repro.core.workload`` so the scheduler and the functional model describe
-the same networks.
+the same networks, and ``make_program_forward`` runs the same nets through
+the compiled ``CrossbarProgram`` path (``repro.program``): the scheduler's
+mount rounds + FB ops executed on the Pallas crossbar kernels.
 """
 
 from __future__ import annotations
@@ -40,6 +42,32 @@ def make_crossbar_matmul(cfg: Optional[CrossbarConfig] = None,
     def mm(x, w):
         return crossbar_linear(x, w, cfg, noise_key)
     return mm
+
+
+def make_program_forward(net: str, cfg: Optional[CrossbarConfig] = None,
+                         return_logits: bool = True,
+                         **compile_kw) -> Callable[[dict, jnp.ndarray],
+                                                   jnp.ndarray]:
+    """Compile-then-execute forward: the scheduled program computes.
+
+    Lowers ``net`` once through the scheduler (Algorithms 1 & 2 +
+    sequence-pair decoding, ``repro.program.compile``) and returns a
+    ``forward(params, x)`` that executes the resulting
+    ``CrossbarProgram`` — every GEMM through the ``crossbar_gemm``
+    Pallas kernel, every post-op through the fused ``fb_epilogue``
+    kernel.  Under a clip-free config this is bit-identical to
+    ``forward(params, x, mm=make_crossbar_matmul(cfg))`` when both are
+    jitted (DESIGN.md §5).  ``return_logits=True`` mirrors the
+    functional forward's output; ``False`` returns the softmax FB's
+    probabilities.
+    """
+    from repro.program import compile_network, execute_program
+    program = compile_network(net, cfg=cfg, **compile_kw)
+
+    def forward(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+        return execute_program(program, params, x,
+                               return_logits=return_logits)
+    return forward
 
 
 # ---------------------------------------------------------------------------

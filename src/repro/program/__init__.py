@@ -1,0 +1,20 @@
+"""Crossbar program subsystem: compile a scheduled network, execute it.
+
+``compile.py`` lowers a ``core/workload.py`` network through Algorithms
+1 & 2 + sequence-pair decoding into a static ``CrossbarProgram`` (mount
+rounds + FB ops with concrete tile shapes, weight slices, and buffer
+wiring); ``execute.py`` runs the program batched under ``jax.jit`` /
+``lax.scan``, routing every GEMM through the ``crossbar_gemm`` Pallas
+kernel and every post-op through the fused ``fb_epilogue`` kernel;
+``serve.py`` is the compile-once / execute-per-batch serving entry.
+"""
+
+from .compile import (CrossbarProgram, MountRound, ProgramOp,
+                      compile_network)
+from .execute import execute_program
+from .serve import ProgramServer, make_server
+
+__all__ = [
+    "CrossbarProgram", "MountRound", "ProgramOp", "compile_network",
+    "execute_program", "ProgramServer", "make_server",
+]

@@ -1,0 +1,238 @@
+"""Compiler: lower a scheduled CNN into an executable ``CrossbarProgram``.
+
+The lowering pipeline per GEMM layer group (paper §III):
+
+  1. ``build_group_requests`` turns the group (conv|fc + trailing
+     res/relu/pool/softmax) into FB requests + consumer edges (HMS).
+  2. ``plan_array`` runs Algorithm 2 (FB size balancing) and Algorithm 1
+     + sequence-pair decoding, yielding the placed ``ArrayPlan``.
+  3. The GEMM request's per-array slice (bx, by) fixes the **tile
+     shape**: ``tile_rows`` rows of the im2col matrix per mount (also
+     the ADC row-chunk — each mount is one physical array read) and
+     ``tile_cols`` logical output columns (the FB's column capacity
+     divided by the weight bit planes).
+  4. The full weight matrix is partitioned into **mount rounds** —
+     ``ceil(K / tile_rows) x ceil(N / tile_cols)`` rectangular weight
+     slices, the sequence of array (re)configurations that covers the
+     layer.  Row-adjacent mounts are partial-sum chained (SnA across
+     stacked arrays); column-adjacent mounts concatenate outputs.
+  5. Each layer becomes a ``ProgramOp`` with explicit buffer wiring
+     (``src``/``dst``/``res_src`` name the producing layer's buffer),
+     so the executor is a pure dataflow interpreter.
+
+Because consumer FBs always reserve rows below the GEMM FB, every tile
+has ``tile_rows < array_rows``; with the paper's 9-bit ADC this makes
+every program GEMM clip-free (DESIGN.md §4) — the scheduled program is
+*exactly* a quantized int GEMM pipeline.
+
+The FB op vocabulary is ``gemm | relu | maxpool | avgpool | residual |
+softmax``; post-ops must follow the canonical FB chain order
+``residual -> relu -> pool -> softmax`` (the only order the paper's
+workloads produce — Fig 4a merges res under conv, §II-C2 merges ReLU
+into max pool, softmax consumes the fc head).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.crossbar import CrossbarConfig
+from repro.core.scheduling import ArrayPlan, plan_array
+from repro.core.simulator import ChipConfig, build_group_requests
+from repro.core.workload import WORKLOADS, LayerSpec, layer_groups
+
+# canonical FB chain order inside one fused stage (gemm implicit first)
+_POST_RANK = {"residual": 0, "relu": 1, "maxpool": 2, "avgpool": 2,
+              "softmax": 3}
+# workload layer kind -> FB request kind in the ArrayPlan (ReLU merges
+# into the max FB when a pool follows, paper §II-C2)
+_FB_KIND = {"maxpool": ("max",), "relu": ("relu", "max"),
+            "residual": ("res",), "softmax": ("softmax",)}
+
+
+@dataclasses.dataclass(frozen=True)
+class MountRound:
+    """One array (re)configuration: a rectangular weight slice.
+
+    ``[k0:k1]`` rows of the im2col weight matrix and logical output
+    columns ``[n0:n1]``.  Mounts sharing columns are partial-sum chained
+    over K (SnA); mounts sharing rows concatenate over N.
+    """
+
+    round_id: int
+    k0: int
+    k1: int
+    n0: int
+    n1: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramOp:
+    """One FB op of the static program (see module docstring)."""
+
+    kind: str                  # gemm|relu|maxpool|avgpool|residual|softmax
+    name: str                  # producing workload layer
+    src: str                   # input buffer (a ProgramOp name or "input")
+    dst: str                   # output buffer (== name)
+    # gemm
+    param: str = ""            # model params key
+    is_conv: bool = False
+    ksize: int = 1
+    stride: int = 1
+    padding: int = 0
+    out_hw: int = 0            # spatial extent of the gemm output (conv)
+    out_ch: int = 0            # logical N
+    tile_rows: int = 0         # per-mount K slice == ADC row chunk
+    tile_cols: int = 0         # per-mount logical N slice
+    mount_rounds: tuple[MountRound, ...] = ()
+    # pool
+    window: int = 0            # pool window edge (== stride; VALID)
+    in_hw: int = 0             # spatial extent entering the pool
+    # residual
+    res_src: str = ""          # buffer holding the residual addend
+    # decoded FB placement (from the group's ArrayPlan; -1 = no FB,
+    # e.g. avgpool which HURRY computes in the SnA/LUT datapath)
+    fb_row0: int = -1
+    fb_col0: int = -1
+    fb_rows: int = 0
+    fb_cols: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class CrossbarProgram:
+    """A compiled network: static op list + per-group array plans."""
+
+    net: str
+    cfg: CrossbarConfig
+    ops: tuple[ProgramOp, ...]
+    plans: tuple[ArrayPlan, ...]
+    input: str
+    output: str                # final buffer (softmax output when present)
+    logits: str                # last GEMM-stage buffer (pre-softmax)
+
+    @property
+    def n_mount_rounds(self) -> int:
+        return sum(len(op.mount_rounds) for op in self.ops
+                   if op.kind == "gemm")
+
+    def stages(self) -> list[tuple[ProgramOp, list[ProgramOp]]]:
+        """Group the op list into (gemm, fused post-op chain) stages."""
+        out: list[tuple[ProgramOp, list[ProgramOp]]] = []
+        for op in self.ops:
+            if op.kind == "gemm":
+                out.append((op, []))
+            else:
+                out[-1][1].append(op)
+        return out
+
+    def summary(self) -> str:
+        lines = [f"CrossbarProgram({self.net}): {len(self.ops)} FB ops, "
+                 f"{self.n_mount_rounds} mount rounds"]
+        for gemm, posts in self.stages():
+            chain = "+".join([gemm.kind] + [p.kind for p in posts])
+            lines.append(
+                f"  {gemm.name:12s} {chain:30s} "
+                f"tile {gemm.tile_rows}x{gemm.tile_cols} "
+                f"mounts {len(gemm.mount_rounds)}")
+        return "\n".join(lines)
+
+
+def _fb_fields(plan: ArrayPlan, kinds: tuple[str, ...]) -> dict:
+    b = plan.block_of(*kinds) if kinds else None
+    if b is None:
+        return {}
+    return {"fb_row0": b.row0, "fb_col0": b.col0,
+            "fb_rows": b.rows, "fb_cols": b.cols}
+
+
+def compile_network(net: str | list[LayerSpec], *,
+                    chip: ChipConfig | None = None,
+                    cfg: CrossbarConfig | None = None,
+                    name: str = "") -> CrossbarProgram:
+    """Lower a workload network (name or LayerSpec list) to a program."""
+    chip = chip or ChipConfig()
+    cfg = cfg or CrossbarConfig(rows=chip.array_rows,
+                                weight_bits=chip.weight_bits,
+                                input_bits=chip.input_bits)
+    if isinstance(net, str):
+        name = name or net
+        layers = WORKLOADS[net]()
+    else:
+        layers = list(net)
+        name = name or "custom"
+    planes = chip.weight_planes
+
+    ops: list[ProgramOp] = []
+    plans: list[ArrayPlan] = []
+    finals: set[str] = {"input"}
+    prev = "input"
+    for group in layer_groups(layers):
+        head = group[0]
+        if head.kind not in ("conv", "fc"):
+            raise ValueError(f"group head {head.name} is {head.kind}, "
+                             "expected a GEMM layer")
+        reqs, consumes, _ = build_group_requests(group, chip)
+        plan = plan_array(reqs, chip.array_rows, chip.array_cols, consumes,
+                          name=head.name)
+        plans.append(plan)
+
+        K = max(head.gemm_rows, 1)
+        N = max(head.gemm_cols_logical, 1)
+        tile_rows = reqs[0].req_rows
+        tile_cols = max(1, reqs[0].req_cols // planes)
+        rounds = []
+        rid = 0
+        for kt in range(math.ceil(K / tile_rows)):
+            for nt in range(math.ceil(N / tile_cols)):
+                rounds.append(MountRound(
+                    rid, kt * tile_rows, min(K, (kt + 1) * tile_rows),
+                    nt * tile_cols, min(N, (nt + 1) * tile_cols)))
+                rid += 1
+
+        src = head.input_from or prev
+        if src not in finals:
+            raise ValueError(f"{head.name} consumes unknown buffer {src!r}")
+        ops.append(ProgramOp(
+            kind="gemm", name=head.name, src=src, dst=head.name,
+            param=head.name, is_conv=head.kind == "conv",
+            ksize=head.ksize, stride=head.stride, padding=head.padding,
+            out_hw=head.out_hw, out_ch=N, tile_rows=tile_rows,
+            tile_cols=tile_cols, mount_rounds=tuple(rounds),
+            **_fb_fields(plan, ("conv", "fc"))))
+
+        rank = -1
+        cur = head.name
+        for l in group[1:]:
+            if l.kind not in _POST_RANK:
+                raise ValueError(f"unsupported FB op {l.kind} ({l.name})")
+            if _POST_RANK[l.kind] <= rank:
+                raise ValueError(
+                    f"group {head.name}: {l.kind} out of canonical FB "
+                    "chain order (residual -> relu -> pool -> softmax)")
+            rank = _POST_RANK[l.kind]
+            extra: dict = {}
+            if l.kind in ("maxpool", "avgpool"):
+                if l.ksize != l.stride:
+                    raise ValueError(
+                        f"{l.name}: only window == stride pooling maps "
+                        "onto the FB column tiling")
+                extra = {"window": l.ksize, "in_hw": l.in_hw,
+                         "out_hw": l.out_hw}
+            if l.kind == "residual":
+                if l.residual_from not in finals:
+                    raise ValueError(f"{l.name} residual source "
+                                     f"{l.residual_from!r} not materialized")
+                extra = {"res_src": l.residual_from}
+            ops.append(ProgramOp(
+                kind=l.kind, name=l.name, src=cur, dst=l.name,
+                out_ch=l.out_ch or l.features_out, **extra,
+                **_fb_fields(plan, _FB_KIND.get(l.kind, ()))))
+            cur = l.name
+        prev = cur
+        finals.add(cur)
+
+    logits = next(op.dst for op in reversed(ops) if op.kind == "gemm")
+    return CrossbarProgram(net=name, cfg=cfg, ops=tuple(ops),
+                           plans=tuple(plans), input="input",
+                           output=ops[-1].dst, logits=logits)

@@ -1,0 +1,59 @@
+"""Batched serving entry: compile once, execute per request batch.
+
+``make_server`` lowers the network to a ``CrossbarProgram`` a single
+time; each ``ProgramServer`` call runs the jitted executor on one
+request batch (XLA caches one executable per batch shape, so
+steady-state calls are pure execution — the numbers persisted in
+``BENCH_program.json``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.crossbar import CrossbarConfig
+from repro.core.simulator import ChipConfig
+
+from .compile import CrossbarProgram, compile_network
+from .execute import execute_program
+
+
+@dataclasses.dataclass
+class ProgramServer:
+    """A compiled network + jitted executor, ready for request batches."""
+
+    program: CrossbarProgram
+    params: dict
+    _fn: Callable[[dict, jnp.ndarray], jnp.ndarray]
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        return self._fn(self.params, x)
+
+    def warmup(self, batch: int = 1, hw: int = 32, ch: int = 3) -> None:
+        """Pay trace + compile for one batch shape ahead of traffic."""
+        jax.block_until_ready(self(jnp.zeros((batch, hw, hw, ch),
+                                             jnp.float32)))
+
+
+def make_server(net: str, params: dict | None = None, *,
+                cfg: CrossbarConfig | None = None,
+                chip: ChipConfig | None = None,
+                return_logits: bool = False,
+                seed: int = 0, **exec_kw) -> ProgramServer:
+    """Compile ``net`` once and wrap it for per-batch serving.
+
+    ``params`` defaults to a fresh ``models.cnn`` init (the compiled
+    program consumes the exact same parameter pytree as the functional
+    forward).  Extra kwargs go to ``execute_program`` (block sizes).
+    """
+    program = compile_network(net, chip=chip, cfg=cfg)
+    if params is None:
+        from repro.models.cnn import CNN_MODELS   # lazy: models is optional
+        params = CNN_MODELS[net].init(jax.random.PRNGKey(seed))
+    fn = jax.jit(lambda p, x: execute_program(
+        program, p, x, return_logits=return_logits, **exec_kw))
+    return ProgramServer(program=program, params=params, _fn=fn)

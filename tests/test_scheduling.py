@@ -2,9 +2,10 @@
 
 import pytest
 
-from repro.core import (ArrayConfig, FBRequest, check_legal,
+from repro.core import (ArrayConfig, ArrayPlan, FBRequest, check_legal,
                         decode_sequence_pair, fb_relative_positioning,
-                        fb_size_balancing, place_fbs, schedule_array)
+                        fb_size_balancing, place_fbs, plan_array,
+                        schedule_array)
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -43,6 +44,24 @@ def test_size_balancing_fits_and_legal():
     blocks = fb_size_balancing(reqs, 512, 512, consumes)
     placed = place_fbs(blocks, consumes)
     check_legal(placed, ArrayConfig())   # raises on overlap / out of bounds
+
+
+def test_plan_array_exports_decoded_coordinates():
+    """ArrayPlan carries the sequence pair AND its decoded placement —
+    one structure for the simulator, the program compiler, and
+    visualizers, identical to the two-step balance+place path."""
+    reqs = _reqs([("conv", 480, 512, 256, 1), ("res", 8, 512, 1, 1),
+                  ("max", 26, 256, 64, 4)])
+    consumes = {1: 0, 2: 1}
+    plan = plan_array(reqs, 512, 512, consumes, name="g")
+    assert isinstance(plan, ArrayPlan) and plan.name == "g"
+    legacy = place_fbs(fb_size_balancing(reqs, 512, 512, consumes), consumes)
+    assert list(plan.blocks) == legacy
+    assert plan.coords == tuple((b.row0, b.col0) for b in legacy)
+    assert plan.sizes == tuple((b.rows, b.cols) for b in legacy)
+    assert sorted(plan.seq1) == sorted(plan.seq2) == [0, 1, 2]
+    assert plan.block_of("conv", "fc") is plan.blocks[0]
+    check_legal(plan.blocks, ArrayConfig())
 
 
 def test_schedule_array_pipelined_faster_than_serial():
