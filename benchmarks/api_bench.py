@@ -1,0 +1,61 @@
+"""``repro.api`` front-door benchmark: compile / save / load / run.
+
+Measures the CompiledModel lifecycle the serving story depends on:
+one-time graph->program compile cost, ``save``/``load`` wall time (the
+path that lets serving processes skip compilation), and steady-state
+``.run`` µs/call across multiple batch shapes (one executable per shape,
+warmed up first).  ``derived`` carries a per-row check value; for the
+run rows it is the argmax agreement between the loaded model and the
+in-memory one, which must be 1.0 (save/load is bit-exact).
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro import api
+from repro.api import HurryConfig
+
+NET = "alexnet"
+BATCHES = (1, 4)
+
+
+def _t(fn, iters: int = 2):
+    out = fn()                                 # warm-up call
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    return out, (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rows = []
+    config = HurryConfig(array_rows=511)       # clip-free (DESIGN.md §4)
+
+    t0 = time.perf_counter()
+    model = api.compile(NET, config)
+    compile_us = (time.perf_counter() - t0) * 1e6
+    rows.append((f"api/compile/{NET}", compile_us,
+                 model.program.n_mount_rounds))
+
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, f"{NET}.npz")
+        _, save_us = _t(lambda: model.save(path))
+        rows.append((f"api/save/{NET}", save_us,
+                     os.path.getsize(path) / 1024))
+        loaded, load_us = _t(lambda: api.load(path))
+        rows.append((f"api/load/{NET}", load_us, len(loaded.program.ops)))
+
+    for batch in BATCHES:
+        x = jax.random.normal(jax.random.PRNGKey(0),
+                              model.graph.input_shape(batch))
+        _, us = _t(lambda: jax.block_until_ready(model.run(x)))
+        agree = float((np.argmax(np.asarray(model.run(x)), 1)
+                       == np.argmax(np.asarray(loaded.run(x)), 1)).mean())
+        rows.append((f"api/run/{NET}/b{batch}", us, agree))
+    return rows

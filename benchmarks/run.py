@@ -4,18 +4,20 @@ Prints ``name,us_per_call,derived`` CSV.  Sections:
   paper_figs    — HURRY Figs 6/7/8 + accuracy (simulator-derived)
   kernels_bench — Pallas kernel microbenches (interpret mode on CPU)
   program_bench — compiled-program serving (compile once, us per batch)
+  api_bench     — repro.api lifecycle (compile / save / load / run)
   lm_step       — LM train/serve step wall-times on reduced configs
 
-``--section kernels`` (etc.) runs one section only; the kernels and
-program sections also persist their rows to ``BENCH_<section>.json``
-(see ``bench_io``) so future PRs can diff timings.
+``--section kernels`` (etc.) runs one section only; the kernels,
+program, and api sections also persist their rows to
+``BENCH_<section>.json`` (see ``bench_io``) so future PRs can diff
+timings.
 """
 
 from __future__ import annotations
 
 import argparse
 
-SECTIONS = ("all", "paper", "kernels", "program", "lm")
+SECTIONS = ("all", "paper", "kernels", "program", "api", "lm")
 
 
 def main(argv: list[str] | None = None) -> None:
@@ -49,6 +51,15 @@ def main(argv: list[str] | None = None) -> None:
             rows.extend(prows)
         except ImportError:
             if args.section == "program":
+                raise
+    if args.section in ("all", "api"):
+        try:
+            from benchmarks import api_bench, bench_io
+            arows = api_bench.run()
+            bench_io.write_bench_json("api", arows)
+            rows.extend(arows)
+        except ImportError:
+            if args.section == "api":
                 raise
     if args.section in ("all", "lm"):
         try:

@@ -1,0 +1,25 @@
+"""``repro.api`` — the front door to the HURRY stack.
+
+Author a network with ``NetworkBuilder`` (shape inference + build-time
+validation), configure the chip/crossbar/executor with one
+``HurryConfig``, then::
+
+    model = api.compile(graph, config)   # scheduler -> CrossbarProgram
+    probs = model.run(x)                 # Pallas crossbar + fused-FB
+    report = model.simulate()            # cycles / energy / area
+    model.save(path); api.load(path)     # serve without recompiling
+
+The three paper CNNs live in ``repro.api.zoo`` as builder programs
+(``core.workload.WORKLOADS`` remains a thin compat shim over them).
+"""
+
+from .config import HurryConfig
+from .graph import NetworkBuilder, NetworkGraph
+from .model import SIM_ARCHS, CompiledModel, compile, load
+from .zoo import GRAPHS, alexnet_graph, resnet18_graph, vgg16_graph
+
+__all__ = [
+    "HurryConfig", "NetworkBuilder", "NetworkGraph",
+    "CompiledModel", "compile", "load", "SIM_ARCHS",
+    "GRAPHS", "alexnet_graph", "vgg16_graph", "resnet18_graph",
+]

@@ -1,0 +1,323 @@
+"""Network IR: ``NetworkBuilder`` -> ``NetworkGraph`` with shape inference.
+
+The builder is the front-door authoring surface — users describe a
+network op by op (``nb.conv(...)``, ``nb.relu()``, ``nb.maxpool()``,
+``nb.residual(from_=...)``, ``nb.fc(...)``, ``nb.softmax()``) and every
+call infers the output shape from the running input shape, validating as
+it goes: GEMM-headed groups (a non-GEMM layer before any conv/fc is an
+error naming the layer), known wiring sources, shape-matched residuals,
+window == stride pooling (the only pooling the FB column tiling maps),
+and the canonical FB chain order ``residual -> relu -> pool -> softmax``
+(paper Fig 4a / §II-C2).  Errors surface at *build* time with the
+offending layer's name, not deep inside the compiler.
+
+The resulting ``NetworkGraph`` is the one source of truth for layer
+shapes: the scheduler consumes its ``LayerSpec`` list, ``init_params``
+derives the parameter pytree from it, and ``forward`` is a generic
+functional interpreter (same primitives as ``models/cnn.py``, GEMMs
+routed through any ``mm`` — fp32 or the crossbar functional model) used
+as the numeric reference for compiled programs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.workload import (LayerSpec, POST_RANK, input_spec,
+                                 layer_groups)
+from repro.models.cnn import conv2d, fp_matmul, maxpool
+
+# shapes are ("spatial", hw, ch) until an fc flattens to ("flat", features)
+_SPATIAL, _FLAT = "spatial", "flat"
+_AUTO_PREFIX = {"conv": "conv", "fc": "fc", "relu": "relu",
+                "maxpool": "pool", "avgpool": "avgpool",
+                "residual": "res", "softmax": "softmax"}
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkGraph:
+    """A validated, shape-inferred network: the builder's output."""
+
+    name: str
+    in_hw: int
+    in_ch: int
+    layers: tuple[LayerSpec, ...]
+    in_features: int = 0          # set instead of hw/ch for fc-first nets
+
+    def input_shape(self, batch: int = 1) -> tuple[int, ...]:
+        if self.in_features:
+            return (batch, self.in_features)
+        return (batch, self.in_hw, self.in_hw, self.in_ch)
+
+    def init_params(self, key: jax.Array) -> dict:
+        """He-init parameter pytree whose shapes come from the graph.
+
+        One source of truth: ``models/cnn.py`` and ``api.compile`` both
+        init through here, so layer shapes exist in exactly one place.
+        """
+        params: dict = {}
+        for i, l in enumerate(self.layers):
+            k = jax.random.fold_in(key, i)
+            if l.kind == "conv":
+                fan_in = l.ksize * l.ksize * l.in_ch
+                w = jax.random.normal(
+                    k, (l.ksize, l.ksize, l.in_ch, l.out_ch)
+                ) * jnp.sqrt(2.0 / fan_in)
+                params[l.name] = {"w": w, "b": jnp.zeros((l.out_ch,))}
+            elif l.kind == "fc":
+                w = jax.random.normal(
+                    k, (l.features_in, l.features_out)
+                ) * jnp.sqrt(2.0 / l.features_in)
+                params[l.name] = {"w": w, "b": jnp.zeros((l.features_out,))}
+        return params
+
+    def forward(self, params: dict, x: jnp.ndarray, *,
+                mm: Callable = fp_matmul, logits: bool = False
+                ) -> jnp.ndarray:
+        """Generic functional forward over the graph (the numeric oracle).
+
+        Interprets the layer list with the same primitives the
+        handwritten CNN forwards use, routing every GEMM through ``mm``
+        (``make_crossbar_matmul(cfg)`` for the crossbar model).  Under a
+        clip-free config this matches the compiled-program path bitwise
+        when both are jitted (DESIGN.md §5).  ``logits=True`` returns
+        the last GEMM output (pre-softmax).
+        """
+        bufs: dict[str, jnp.ndarray] = {"input": x}
+        cur = "input"
+        last_gemm = cur
+        for l in self.layers:
+            if l.kind == "conv":
+                src = bufs[l.input_from or cur]
+                p = params[l.name]
+                y = conv2d(src, p["w"], p["b"], l.stride, l.padding, mm)
+                last_gemm = l.name
+            elif l.kind == "fc":
+                src = bufs[l.input_from or cur]
+                if src.ndim == 4:
+                    src = src.reshape(src.shape[0], -1)
+                p = params[l.name]
+                y = mm(src, p["w"]) + p["b"]
+                last_gemm = l.name
+            elif l.kind == "relu":
+                y = jax.nn.relu(bufs[cur])
+            elif l.kind == "maxpool":
+                y = maxpool(bufs[cur], l.ksize, l.stride)
+            elif l.kind == "avgpool":
+                v = bufs[cur]
+                b, h, w_, c = v.shape
+                y = v.reshape(b, h // l.ksize, l.ksize,
+                              w_ // l.ksize, l.ksize, c).mean(axis=(2, 4))
+            elif l.kind == "residual":
+                y = bufs[cur] + bufs[l.residual_from]
+            elif l.kind == "softmax":
+                y = jax.nn.softmax(bufs[cur], axis=-1)
+            else:
+                raise ValueError(f"{l.name}: unknown layer kind {l.kind!r}")
+            bufs[l.name] = y
+            cur = l.name
+        return bufs[last_gemm if logits else cur]
+
+    @classmethod
+    def from_layers(cls, layers, name: str = "custom") -> "NetworkGraph":
+        """Wrap a raw ``LayerSpec`` list (compat path for old call sites).
+
+        Validates GEMM-headed grouping; the input spec is read off the
+        first layer.
+        """
+        layers = tuple(layers)
+        if not layers:
+            raise ValueError("empty network")
+        for _ in layer_groups(list(layers)):   # raises on headless groups
+            pass
+        ihw, ich, ifeat = input_spec(list(layers))
+        return cls(name=name, in_hw=ihw, in_ch=ich, in_features=ifeat,
+                   layers=layers)
+
+
+class NetworkBuilder:
+    """Incremental network authoring with per-op shape inference.
+
+    Every method appends one layer, infers its output shape, validates,
+    and returns the layer's name (usable as ``input_from=`` /
+    ``from_=`` wiring for branches).  ``build()`` returns the immutable
+    ``NetworkGraph``.
+    """
+
+    def __init__(self, name: str = "custom", *, input_hw: int,
+                 input_ch: int):
+        self.name = name
+        self._in = (input_hw, input_ch)
+        self._layers: list[LayerSpec] = []
+        self._shapes: dict[str, tuple] = {
+            "input": (_SPATIAL, input_hw, input_ch)}
+        self._cur = "input"
+        self._finals = {"input"}      # materialized group-final buffers
+        self._counts: dict[str, int] = {}
+        self._has_gemm = False
+
+    # -- internals ---------------------------------------------------------
+
+    def _name(self, kind: str, name: str | None) -> str:
+        if name is None:
+            n = self._counts.get(kind, 0) + 1
+            self._counts[kind] = n
+            name = f"{_AUTO_PREFIX[kind]}{n}"
+        if name in self._shapes:
+            raise ValueError(f"duplicate layer name {name!r}")
+        return name
+
+    def _src_shape(self, name: str, src: str, want: str) -> tuple:
+        if src not in self._shapes:
+            raise ValueError(f"{name}: unknown input layer {src!r}")
+        shape = self._shapes[src]
+        if shape[0] != want:
+            raise ValueError(
+                f"{name}: needs a {want} input, but {src!r} produces "
+                f"{shape[0]} output {shape[1:]}")
+        return shape
+
+    def _require_gemm(self, name: str, kind: str) -> None:
+        if not self._has_gemm:
+            raise ValueError(
+                f"layer {name!r} ({kind}) precedes any GEMM layer; every "
+                "relu/pool/residual/softmax must follow a conv or fc "
+                "group head (HURRY schedules GEMM-headed FB groups)")
+
+    def _add(self, spec: LayerSpec, shape: tuple) -> str:
+        self._layers.append(spec)
+        self._shapes[spec.name] = shape
+        self._cur = spec.name
+        return spec.name
+
+    # -- ops ---------------------------------------------------------------
+
+    def conv(self, out_ch: int, k: int = 3, stride: int = 1,
+             padding: int = 1, *, name: str | None = None,
+             input_from: str = "") -> str:
+        name = self._name("conv", name)
+        # a new GEMM closes the previous group: its output materializes
+        finals = self._finals | {self._cur}
+        src = input_from or self._cur
+        _, hw, ch = self._src_shape(name, src, _SPATIAL)
+        if input_from and input_from not in finals:
+            raise ValueError(
+                f"{name}: input_from={input_from!r} is not a materialized "
+                "group output (only group-final buffers are wired)")
+        out_hw = (hw + 2 * padding - k) // stride + 1
+        if out_hw <= 0:
+            raise ValueError(f"{name}: {k}x{k}/s{stride}/p{padding} conv "
+                             f"over {hw}x{hw} input has no output")
+        self._finals = finals
+        self._has_gemm = True
+        return self._add(
+            LayerSpec(name, "conv", in_ch=ch, out_ch=out_ch, ksize=k,
+                      stride=stride, padding=padding, in_hw=hw,
+                      out_hw=out_hw, input_from=input_from),
+            (_SPATIAL, out_hw, out_ch))
+
+    def fc(self, features_out: int, *, name: str | None = None,
+           input_from: str = "") -> str:
+        name = self._name("fc", name)
+        finals = self._finals | {self._cur}
+        src = input_from or self._cur
+        if input_from and input_from not in finals:
+            raise ValueError(
+                f"{name}: input_from={input_from!r} is not a materialized "
+                "group output (only group-final buffers are wired)")
+        shape = self._shapes.get(src)
+        if shape is None:
+            raise ValueError(f"{name}: unknown input layer {src!r}")
+        fin = shape[1] * shape[1] * shape[2] if shape[0] == _SPATIAL \
+            else shape[1]
+        self._finals = finals
+        self._has_gemm = True
+        return self._add(
+            LayerSpec(name, "fc", features_in=fin,
+                      features_out=features_out, input_from=input_from),
+            (_FLAT, features_out))
+
+    def relu(self, *, name: str | None = None) -> str:
+        name = self._name("relu", name)
+        self._require_gemm(name, "relu")
+        shape = self._shapes[self._cur]
+        if shape[0] == _SPATIAL:
+            spec = LayerSpec(name, "relu", out_ch=shape[2], out_hw=shape[1])
+        else:
+            spec = LayerSpec(name, "relu", features_out=shape[1])
+        return self._add(spec, shape)
+
+    def _pool(self, kind: str, k: int, stride: int,
+              name: str | None) -> str:
+        name = self._name(kind, name)
+        self._require_gemm(name, kind)
+        if k != stride:
+            raise ValueError(
+                f"{name}: only window == stride pooling maps onto the FB "
+                f"column tiling (got window {k}, stride {stride})")
+        _, hw, ch = self._src_shape(name, self._cur, _SPATIAL)
+        if hw % k:
+            raise ValueError(f"{name}: {k}x{k} window does not tile the "
+                             f"{hw}x{hw} input")
+        return self._add(
+            LayerSpec(name, kind, out_ch=ch, ksize=k, stride=stride,
+                      in_hw=hw, out_hw=hw // stride),
+            (_SPATIAL, hw // stride, ch))
+
+    def maxpool(self, k: int = 2, stride: int = 2, *,
+                name: str | None = None) -> str:
+        return self._pool("maxpool", k, stride, name)
+
+    def avgpool(self, k: int = 2, stride: int = 2, *,
+                name: str | None = None) -> str:
+        return self._pool("avgpool", k, stride, name)
+
+    def residual(self, from_: str, *, name: str | None = None) -> str:
+        name = self._name("residual", name)
+        self._require_gemm(name, "residual")
+        if from_ not in self._finals:
+            raise ValueError(
+                f"{name}: residual source {from_!r} is not a materialized "
+                "group output (it must be a previous group's final buffer)")
+        shape = self._shapes[self._cur]
+        if self._shapes[from_] != shape:
+            raise ValueError(
+                f"{name}: residual source {from_!r} shape "
+                f"{self._shapes[from_][1:]} != current {shape[1:]}")
+        _, hw, ch = self._src_shape(name, self._cur, _SPATIAL)
+        return self._add(
+            LayerSpec(name, "residual", out_ch=ch, out_hw=hw,
+                      residual_from=from_),
+            shape)
+
+    def softmax(self, *, name: str | None = None) -> str:
+        name = self._name("softmax", name)
+        self._require_gemm(name, "softmax")
+        shape = self._src_shape(name, self._cur, _FLAT)
+        return self._add(
+            LayerSpec(name, "softmax", features_out=shape[1]), shape)
+
+    # -- finalize ----------------------------------------------------------
+
+    def build(self) -> NetworkGraph:
+        if not self._layers:
+            raise ValueError(f"{self.name}: empty network")
+        # grouping + canonical chain order validation (same POST_RANK
+        # table as the compiler, so errors surface at build time with
+        # layer names and the two checks can never diverge)
+        for group in layer_groups(list(self._layers)):
+            rank = -1
+            for l in group[1:]:
+                if POST_RANK[l.kind] <= rank:
+                    raise ValueError(
+                        f"{l.name}: {l.kind} out of canonical FB chain "
+                        "order (residual -> relu -> pool -> softmax) in "
+                        f"group {group[0].name!r}")
+                rank = POST_RANK[l.kind]
+        hw, ch = self._in
+        return NetworkGraph(name=self.name, in_hw=hw, in_ch=ch,
+                            layers=tuple(self._layers))

@@ -1,0 +1,138 @@
+"""The front-door session object: ``api.compile(...) -> CompiledModel``.
+
+One object unifies the former ``compile_network`` / ``execute_program``
+/ ``ProgramServer`` split:
+
+    model = api.compile(graph, HurryConfig(array_rows=511))
+    probs = model.run(x)                    # jitted; cached per batch shape
+    report = model.simulate()               # cycles/energy/area SimReport
+    model.save("model.npz"); m2 = api.load("model.npz")   # skip compile
+
+``run`` keeps one jitted executor per output flavor; XLA caches one
+executable per batch shape underneath, so steady-state calls are pure
+execution.  ``simulate`` runs the analytical chip model on the *same*
+graph the numeric program was compiled from — one network definition,
+both evaluations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.baselines import SimReport, simulate_isaac, simulate_misca
+from repro.core.simulator import simulate_hurry
+from repro.program.compile import CrossbarProgram, compile_network
+from repro.program.execute import execute_program
+
+from .config import HurryConfig
+from .graph import NetworkBuilder, NetworkGraph
+from .serialize import load_model, save_model
+from .zoo import GRAPHS
+
+SIM_ARCHS = ("hurry", "isaac-128", "isaac-256", "isaac-512", "misca")
+
+
+@dataclasses.dataclass
+class CompiledModel:
+    """A compiled network + params: runnable, simulatable, persistable."""
+
+    graph: NetworkGraph
+    config: HurryConfig
+    program: CrossbarProgram
+    params: dict
+    _fns: dict = dataclasses.field(default_factory=dict, repr=False,
+                                   compare=False)
+
+    # -- numeric execution -------------------------------------------------
+
+    def run(self, x: jnp.ndarray, *, logits: bool = False) -> jnp.ndarray:
+        """Execute the compiled program on a batch.
+
+        Returns the program's output buffer (softmax probabilities when
+        the graph ends in softmax); ``logits=True`` returns the last
+        GEMM output.  The jitted executor is built once per flavor and
+        XLA caches one executable per batch shape — steady-state calls
+        are pure execution.
+        """
+        fn = self._fns.get(logits)
+        if fn is None:
+            program, cfg = self.program, self.config
+            fn = jax.jit(lambda p, v: execute_program(
+                program, p, v, block_m=cfg.block_m, block_n=cfg.block_n,
+                return_logits=logits))
+            self._fns[logits] = fn
+        return fn(self.params, x)
+
+    def warmup(self, batch: int = 1, *, logits: bool = False) -> None:
+        """Pay trace + compile for one batch shape ahead of traffic."""
+        x = jnp.zeros(self.program.input_shape(batch), jnp.float32)
+        jax.block_until_ready(self.run(x, logits=logits))
+
+    # -- analytical evaluation --------------------------------------------
+
+    def simulate(self, arch: str = "hurry") -> SimReport:
+        """Cycle/energy/area report for this graph on ``arch``.
+
+        ``arch`` is one of ``SIM_ARCHS`` — the HURRY chip this model was
+        compiled for, or an ISAAC/MISCA comparison chip sharing its
+        geometry.
+        """
+        if arch not in SIM_ARCHS:
+            raise ValueError(f"unknown arch {arch!r}; one of {SIM_ARCHS}")
+        layers = list(self.graph.layers)
+        if arch == "hurry":
+            return simulate_hurry(layers, chip=self.config.chip(),
+                                  name=f"hurry/{self.graph.name}")
+        if arch == "misca":
+            return simulate_misca(layers, chip=self.config)
+        return simulate_isaac(layers, int(arch.split("-")[1]),
+                              chip=self.config)
+
+    # -- introspection / persistence --------------------------------------
+
+    def summary(self) -> str:
+        cfg = self.program.cfg
+        lines = [f"CompiledModel({self.graph.name}): "
+                 f"{len(self.graph.layers)} layers, input "
+                 f"{self.program.input_shape(1)[1:]}, "
+                 f"{cfg.rows}x{cfg.cols} arrays / {cfg.adc_bits}-bit ADC"
+                 f"{' (clip-free)' if cfg.clip_free else ''}",
+                 self.program.summary()]
+        return "\n".join(lines)
+
+    def save(self, path: str) -> str:
+        """Persist program + params so serving skips compilation."""
+        return save_model(self, path)
+
+
+def compile(network, config: HurryConfig | None = None, *,
+            params: dict | None = None, seed: int = 0) -> CompiledModel:
+    """Lower a network to a ``CompiledModel`` under one unified config.
+
+    ``network`` is a ``NetworkGraph``, a ``NetworkBuilder`` (built
+    implicitly), a registry name (``repro.api.zoo``), or a raw
+    ``LayerSpec`` list.  ``params`` defaults to the graph-derived He
+    init (``NetworkGraph.init_params``).
+    """
+    config = config or HurryConfig()
+    if isinstance(network, str):
+        graph = GRAPHS[network]()
+    elif isinstance(network, NetworkBuilder):
+        graph = network.build()
+    elif isinstance(network, NetworkGraph):
+        graph = network
+    else:
+        graph = NetworkGraph.from_layers(network)
+    program = compile_network(graph, config=config)
+    if params is None:
+        params = graph.init_params(jax.random.PRNGKey(seed))
+    return CompiledModel(graph=graph, config=config, program=program,
+                         params=params)
+
+
+def load(path: str) -> CompiledModel:
+    """Load a ``CompiledModel`` from ``save`` — no compilation happens."""
+    return load_model(path)

@@ -1,0 +1,112 @@
+"""Persist compiled models: ``CompiledModel.save`` / ``api.load``.
+
+Format (single ``.npz`` file, version 1):
+
+* ``__meta__`` — a JSON document holding the graph (name, input spec,
+  ``LayerSpec`` list), the ``HurryConfig``, and the compiled
+  ``CrossbarProgram`` *minus its array plans*: net name, derived
+  ``CrossbarConfig``, the full ``ProgramOp`` list (with ``MountRound``
+  weight slices and FB placements), buffer names, and the input spec.
+* ``p0 .. pN`` — the parameter arrays, ordered by the ``params`` index
+  in the meta document (``[layer, key]`` pairs).
+
+Array plans are compile-time placement artifacts the executor never
+reads, so a loaded model serves without them (``plans=()``);
+``CompiledModel.simulate()`` re-derives placement from the graph.
+Everything the jitted executor consumes — ops, tile shapes, mount
+rounds, quantization config, parameters — round-trips exactly, so a
+loaded model's ``run`` is bit-identical to the in-memory one and a
+serving process never invokes the compiler.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.workload import LayerSpec
+from repro.program.compile import CrossbarProgram, MountRound, ProgramOp
+
+from .config import HurryConfig
+from .graph import NetworkGraph
+
+FORMAT = "repro.api/compiled-model"
+VERSION = 1
+
+
+def _program_meta(program: CrossbarProgram) -> dict:
+    ops = []
+    for op in program.ops:
+        d = dataclasses.asdict(op)
+        d["mount_rounds"] = [dataclasses.asdict(r)
+                             for r in op.mount_rounds]
+        ops.append(d)
+    return {"net": program.net, "cfg": dataclasses.asdict(program.cfg),
+            "ops": ops, "input": program.input, "output": program.output,
+            "logits": program.logits, "in_hw": program.in_hw,
+            "in_ch": program.in_ch, "in_features": program.in_features}
+
+
+def _program_from_meta(meta: dict) -> CrossbarProgram:
+    from repro.core.crossbar import CrossbarConfig
+    ops = []
+    for d in meta["ops"]:
+        d = dict(d)
+        d["mount_rounds"] = tuple(MountRound(**r)
+                                  for r in d["mount_rounds"])
+        ops.append(ProgramOp(**d))
+    return CrossbarProgram(
+        net=meta["net"], cfg=CrossbarConfig(**meta["cfg"]),
+        ops=tuple(ops), plans=(), input=meta["input"],
+        output=meta["output"], logits=meta["logits"],
+        in_hw=meta["in_hw"], in_ch=meta["in_ch"],
+        in_features=meta["in_features"])
+
+
+def save_model(model, path: str) -> str:
+    """Write ``model`` (a ``CompiledModel``) to ``path``; returns path."""
+    g = model.graph
+    index = []
+    arrays = {}
+    for layer in sorted(model.params):
+        for key in sorted(model.params[layer]):
+            arrays[f"p{len(index)}"] = np.asarray(model.params[layer][key])
+            index.append([layer, key])
+    meta = {
+        "format": FORMAT, "version": VERSION,
+        "graph": {"name": g.name, "in_hw": g.in_hw, "in_ch": g.in_ch,
+                  "in_features": g.in_features,
+                  "layers": [dataclasses.asdict(l) for l in g.layers]},
+        "config": dataclasses.asdict(model.config),
+        "program": _program_meta(model.program),
+        "params": index,
+    }
+    with open(path, "wb") as f:
+        np.savez(f, __meta__=np.asarray(json.dumps(meta)), **arrays)
+    return path
+
+
+def load_model(path: str):
+    """Load a ``CompiledModel`` saved by ``save_model`` — no compile step."""
+    from .model import CompiledModel
+    with np.load(path, allow_pickle=False) as z:
+        meta = json.loads(str(z["__meta__"][()]))
+        if meta.get("format") != FORMAT:
+            raise ValueError(f"{path}: not a {FORMAT} file")
+        if meta.get("version") != VERSION:
+            raise ValueError(f"{path}: format version {meta.get('version')}"
+                             f" != supported {VERSION}")
+        params: dict = {}
+        for i, (layer, key) in enumerate(meta["params"]):
+            params.setdefault(layer, {})[key] = jnp.asarray(z[f"p{i}"])
+    gm = meta["graph"]
+    graph = NetworkGraph(
+        name=gm["name"], in_hw=gm["in_hw"], in_ch=gm["in_ch"],
+        in_features=gm["in_features"],
+        layers=tuple(LayerSpec(**d) for d in gm["layers"]))
+    return CompiledModel(graph=graph, config=HurryConfig(**meta["config"]),
+                         program=_program_from_meta(meta["program"]),
+                         params=params)

@@ -1,0 +1,83 @@
+"""The paper's benchmark CNNs as ``NetworkBuilder`` programs.
+
+These produce layer-by-layer *identical* ``LayerSpec`` lists to the
+historical handwritten lists in ``core/workload.py`` (same names, same
+shapes, same residual/branch wiring), so the simulator, scheduler, and
+compiled-program paths see exactly the graphs the paper §IV evaluates.
+``core.workload.WORKLOADS`` is now a thin compat shim over this module.
+"""
+
+from __future__ import annotations
+
+from .graph import NetworkBuilder, NetworkGraph
+
+
+def alexnet_graph() -> NetworkGraph:
+    nb = NetworkBuilder("alexnet", input_hw=32, input_ch=3)
+    for i, (ch, pool) in enumerate([(64, True), (192, True), (384, False),
+                                    (256, False), (256, True)], 1):
+        nb.conv(ch, name=f"conv{i}")
+        nb.relu(name=f"relu{i}")
+        if pool:
+            nb.maxpool(name=f"pool{i}")
+    # CIFAR-scale classifier (1024-unit FC variant commonly used for
+    # AlexNet-CIFAR; the ImageNet 4096-unit head would dwarf the convs)
+    nb.fc(1024, name="fc6")
+    nb.relu(name="relu6")
+    nb.fc(1024, name="fc7")
+    nb.relu(name="relu7")
+    nb.fc(10, name="fc8")
+    nb.softmax(name="softmax")
+    return nb.build()
+
+
+def vgg16_graph() -> NetworkGraph:
+    cfg = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+           512, 512, 512, "M", 512, 512, 512, "M"]
+    nb = NetworkBuilder("vgg16", input_hw=32, input_ch=3)
+    i = 1
+    for v in cfg:
+        if v == "M":
+            nb.maxpool(name=f"pool{i}")
+        else:
+            nb.conv(v, name=f"conv{i}")
+            nb.relu(name=f"relu{i}")
+            i += 1
+    nb.fc(512, name="fc1")
+    nb.relu(name="relu_fc1")
+    nb.fc(10, name="fc2")
+    nb.softmax(name="softmax")
+    return nb.build()
+
+
+def resnet18_graph() -> NetworkGraph:
+    nb = NetworkBuilder("resnet18", input_hw=32, input_ch=3)
+    nb.conv(64, name="conv0")
+    entry = nb.relu(name="relu0")     # block input = prev block's output
+    in_ch = 64
+    for stage, ch in enumerate((64, 128, 256, 512)):
+        for b in range(2):
+            s = 2 if (stage > 0 and b == 0) else 1
+            n = f"s{stage}b{b}"
+            res_src = entry           # identity shortcut unless projected
+            if in_ch != ch:
+                # 1x1 projection on the shortcut (its own GEMM group)
+                res_src = nb.conv(ch, k=1, stride=s, padding=0,
+                                  name=f"{n}_proj", input_from=entry)
+            nb.conv(ch, stride=s, name=f"{n}_conv1", input_from=entry)
+            nb.relu(name=f"{n}_relu1")
+            nb.conv(ch, name=f"{n}_conv2")
+            nb.residual(res_src, name=f"{n}_res")
+            entry = nb.relu(name=f"{n}_relu2")
+            in_ch = ch
+    nb.avgpool(k=4, stride=4, name="avgpool")
+    nb.fc(10, name="fc")
+    nb.softmax(name="softmax")
+    return nb.build()
+
+
+GRAPHS = {
+    "alexnet": alexnet_graph,
+    "vgg16": vgg16_graph,
+    "resnet18": resnet18_graph,
+}

@@ -42,7 +42,10 @@ class BaselineConfig(ChipConfig):
 
     @property
     def arrays_per_ima(self) -> int:
-        return (self.array_rows // self.unit_array) ** 2
+        # same total cell budget per IMA as HURRY; at least one array
+        # even when the unit does not tile the IMA (e.g. 512-unit arrays
+        # on a 511-row clip-free geometry)
+        return max(1, self.array_rows // self.unit_array) ** 2
 
     @property
     def n_unit_arrays(self) -> int:
@@ -192,10 +195,20 @@ def pool_arrays_area(pool_arrays: dict[int, int],
     return pool_arrays
 
 
+def as_baseline(chip) -> BaselineConfig:
+    """Accept a BaselineConfig, ``None``, or anything with a
+    ``.baseline()`` derivation (``repro.api.HurryConfig``) — the unified
+    config derives the comparison chip in one place."""
+    if chip is None:
+        return BaselineConfig()
+    derive = getattr(chip, "baseline", None)
+    return derive() if callable(derive) else chip
+
+
 def simulate_isaac(layers: list[LayerSpec], unit_array: int = 128,
                    chip: BaselineConfig | None = None,
                    name: str | None = None) -> SimReport:
-    chip = chip or BaselineConfig()
+    chip = as_baseline(chip)
     chip = dataclasses.replace(chip, unit_array=unit_array)
     name = name or f"isaac-{unit_array}"
     pools = {unit_array: chip.n_unit_arrays}
@@ -211,7 +224,7 @@ def simulate_misca(layers: list[LayerSpec], chip: BaselineConfig | None = None,
     the idle pools are charged in the temporal-utilization denominator and
     in the idle ADC power (the paper's critique, §IV-B3).
     """
-    chip = chip or BaselineConfig()
+    chip = as_baseline(chip)
     sizes = (128, 256, 512)
     per_ima_cells = chip.array_rows * chip.array_cols
     pools = {s: max(1, per_ima_cells // 3 // (s * s)) * chip.n_arrays

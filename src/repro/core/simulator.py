@@ -49,6 +49,22 @@ class ChipConfig:
     controller_area_mult: float = 1.12   # up to 12% of chip area (§IV-B4)
     batch: int = 16
 
+    def crossbar(self, **overrides) -> "CrossbarConfig":
+        """Numeric array model matching this chip's geometry/bit widths.
+
+        The base ChipConfig -> CrossbarConfig derivation; knobs that are
+        not chip structure (ADC/DAC resolution, read noise) keep their
+        ``CrossbarConfig`` defaults unless overridden.  The unified
+        ``repro.api.HurryConfig`` derives through here too, so this
+        mapping exists exactly once.
+        """
+        from .crossbar import CrossbarConfig
+        kw = dict(rows=self.array_rows, cols=self.array_cols,
+                  cell_bits=self.cell_bits, weight_bits=self.weight_bits,
+                  input_bits=self.input_bits)
+        kw.update(overrides)
+        return CrossbarConfig(**kw)
+
     @property
     def n_arrays(self) -> int:
         return self.n_tiles * self.imas_per_tile
@@ -190,8 +206,20 @@ def build_group_requests(group: list[LayerSpec], chip: ChipConfig
 # HURRY simulation
 # ---------------------------------------------------------------------------
 
+def as_chip(chip) -> ChipConfig:
+    """Accept a ChipConfig or anything with a ``.chip()`` derivation.
+
+    ``repro.api.HurryConfig`` is the unified front-door config; deriving
+    through its ``.chip()`` keeps the HurryConfig -> ChipConfig mapping
+    in one place without ``core`` importing ``api``.
+    """
+    derive = getattr(chip, "chip", None)
+    return derive() if callable(derive) else chip
+
+
 def simulate_hurry(layers: list[LayerSpec], chip: ChipConfig = ChipConfig(),
                    name: str = "hurry") -> SimReport:
+    chip = as_chip(chip)
     acfg = ArrayConfig(chip.array_rows, chip.array_cols, chip.input_phases)
     em, am = EnergyModel(), AreaModel()
     planes = chip.weight_planes

@@ -1,9 +1,13 @@
-"""CNN workload descriptions for the scheduler (paper §IV benchmarks).
+"""Scheduling-level layer specs + the GEMM-group iterator.
 
-These are *scheduling-level* layer specs (the functional JAX models live
-in ``repro.models.cnn``).  Shapes follow the common CIFAR-10 variants of
-AlexNet / VGG-16 / ResNet-18 used by PUMAsim-style evaluations; BatchNorm
-is folded into the preceding conv for inference.
+``LayerSpec`` is the normalized per-layer record every scheduler-facing
+consumer reads (simulator, baselines, program compiler).  Networks are
+*authored* through ``repro.api.NetworkBuilder`` (shape inference +
+build-time validation); the three paper CNNs live in ``repro.api.zoo``
+as builder programs, and the ``WORKLOADS`` registry below is a thin
+compat shim over them.  Shapes follow the common CIFAR-10 variants of
+AlexNet / VGG-16 / ResNet-18 used by PUMAsim-style evaluations;
+BatchNorm is folded into the preceding conv for inference.
 """
 
 from __future__ import annotations
@@ -71,96 +75,23 @@ class LayerSpec:
         return self.features_out
 
 
-def _conv(name, in_ch, out_ch, in_hw, k=3, s=1, p=1) -> LayerSpec:
-    out_hw = (in_hw + 2 * p - k) // s + 1
-    return LayerSpec(name, "conv", in_ch=in_ch, out_ch=out_ch, ksize=k,
-                     stride=s, padding=p, in_hw=in_hw, out_hw=out_hw)
-
-
-def _relu(name, prev: LayerSpec) -> LayerSpec:
-    ch = prev.out_ch or prev.features_out
-    return LayerSpec(name, "relu", out_ch=ch, out_hw=prev.out_hw,
-                     features_out=prev.features_out)
-
-
-def _pool(name, prev: LayerSpec, k=2, s=2) -> LayerSpec:
-    out_hw = prev.out_hw // s
-    return LayerSpec(name, "maxpool", out_ch=prev.out_ch, ksize=k, stride=s,
-                     in_hw=prev.out_hw, out_hw=out_hw)
-
-
-def _fc(name, fin, fout) -> LayerSpec:
-    return LayerSpec(name, "fc", features_in=fin, features_out=fout)
-
+# -- the paper CNNs (compat shims over the repro.api builder programs) -----
+# The graphs themselves are authored in ``repro.api.zoo`` through
+# ``NetworkBuilder`` (imported lazily: api builds on top of core).
 
 def alexnet_cifar() -> list[LayerSpec]:
-    ls: list[LayerSpec] = []
-    c1 = _conv("conv1", 3, 64, 32); ls += [c1, _relu("relu1", c1), _pool("pool1", c1)]
-    c2 = _conv("conv2", 64, 192, 16); ls += [c2, _relu("relu2", c2), _pool("pool2", c2)]
-    c3 = _conv("conv3", 192, 384, 8); ls += [c3, _relu("relu3", c3)]
-    c4 = _conv("conv4", 384, 256, 8); ls += [c4, _relu("relu4", c4)]
-    c5 = _conv("conv5", 256, 256, 8); ls += [c5, _relu("relu5", c5), _pool("pool5", c5)]
-    # CIFAR-scale classifier (1024-unit FC variant commonly used for
-    # AlexNet-CIFAR; the ImageNet 4096-unit head would dwarf the convs)
-    ls += [_fc("fc6", 256 * 4 * 4, 1024), LayerSpec("relu6", "relu", features_out=1024)]
-    ls += [_fc("fc7", 1024, 1024), LayerSpec("relu7", "relu", features_out=1024)]
-    ls += [_fc("fc8", 1024, 10), LayerSpec("softmax", "softmax", features_out=10)]
-    return ls
+    from repro.api.zoo import alexnet_graph
+    return list(alexnet_graph().layers)
 
 
 def vgg16_cifar() -> list[LayerSpec]:
-    cfg = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
-           512, 512, 512, "M", 512, 512, 512, "M"]
-    ls: list[LayerSpec] = []
-    in_ch, hw, i = 3, 32, 1
-    prev = None
-    for v in cfg:
-        if v == "M":
-            ls.append(_pool(f"pool{i}", prev))
-            hw //= 2
-        else:
-            prev = _conv(f"conv{i}", in_ch, v, hw)
-            ls += [prev, _relu(f"relu{i}", prev)]
-            in_ch = v
-            i += 1
-    ls += [_fc("fc1", 512, 512), LayerSpec("relu_fc1", "relu", features_out=512),
-           _fc("fc2", 512, 10), LayerSpec("softmax", "softmax", features_out=10)]
-    return ls
+    from repro.api.zoo import vgg16_graph
+    return list(vgg16_graph().layers)
 
 
 def resnet18_cifar() -> list[LayerSpec]:
-    ls: list[LayerSpec] = []
-    c0 = _conv("conv0", 3, 64, 32)
-    ls += [c0, _relu("relu0", c0)]
-    hw, in_ch = 32, 64
-    entry = "relu0"            # block input = previous block's output
-    for stage, (ch, blocks) in enumerate([(64, 2), (128, 2), (256, 2), (512, 2)]):
-        for b in range(blocks):
-            s = 2 if (stage > 0 and b == 0) else 1
-            n = f"s{stage}b{b}"
-            res_src = entry    # identity shortcut unless a projection exists
-            if in_ch != ch:
-                # 1x1 projection on the shortcut (its own GEMM group)
-                proj = dataclasses.replace(
-                    _conv(f"{n}_proj", in_ch, ch, hw, k=1, s=s, p=0),
-                    input_from=entry)
-                ls.append(proj)
-                res_src = proj.name
-            ca = dataclasses.replace(_conv(f"{n}_conv1", in_ch, ch, hw, s=s),
-                                     input_from=entry)
-            hw = ca.out_hw
-            ls += [ca, _relu(f"{n}_relu1", ca)]
-            cb = _conv(f"{n}_conv2", ch, ch, hw)
-            ls += [cb,
-                   LayerSpec(f"{n}_res", "residual", out_ch=ch, out_hw=hw,
-                             residual_from=res_src),
-                   _relu(f"{n}_relu2", cb)]
-            in_ch = ch
-            entry = f"{n}_relu2"
-    ls += [LayerSpec("avgpool", "avgpool", out_ch=512, ksize=4, stride=4,
-                     in_hw=4, out_hw=1),
-           _fc("fc", 512, 10), LayerSpec("softmax", "softmax", features_out=10)]
-    return ls
+    from repro.api.zoo import resnet18_graph
+    return list(resnet18_graph().layers)
 
 
 WORKLOADS = {
@@ -170,11 +101,35 @@ WORKLOADS = {
 }
 
 
+# canonical FB chain order inside one fused group (gemm implicit first):
+# residual -> relu -> pool -> softmax (paper Fig 4a merges res under
+# conv, §II-C2 merges ReLU into max pool, softmax consumes the fc head).
+# Shared by the program compiler and the api builder's build-time check.
+POST_RANK = {"residual": 0, "relu": 1, "maxpool": 2, "avgpool": 2,
+             "softmax": 3}
+
+
+def input_spec(layers: list[LayerSpec]) -> tuple[int, int, int]:
+    """``(in_hw, in_ch, in_features)`` read off the first (GEMM) layer.
+
+    The single derivation of a network's input signature — consumed by
+    ``NetworkGraph.from_layers`` and ``compile_network`` so serving
+    warmup and graph input shapes can never disagree.
+    """
+    head = layers[0]
+    if head.kind == "conv":
+        return head.in_hw, head.in_ch, 0
+    return 0, 0, head.features_in
+
+
 def layer_groups(layers: list[LayerSpec]) -> Iterator[list[LayerSpec]]:
     """Group each GEMM layer with its trailing elementwise/pool consumers.
 
     One group becomes one FB chain inside one (set of) array(s) — the unit
-    HURRY schedules (conv + res + relu + pool fused; §III-A).
+    HURRY schedules (conv + res + relu + pool fused; §III-A).  A non-GEMM
+    layer before any conv/fc has no group head to attach to — that is a
+    malformed network, rejected here (and earlier, with the same message,
+    by ``repro.api.NetworkBuilder`` at graph-build time).
     """
     group: list[LayerSpec] = []
     for l in layers:
@@ -184,7 +139,10 @@ def layer_groups(layers: list[LayerSpec]) -> Iterator[list[LayerSpec]]:
             group = [l]
         else:
             if not group:
-                group = []
+                raise ValueError(
+                    f"layer {l.name!r} ({l.kind}) precedes any GEMM layer; "
+                    "every relu/pool/residual/softmax must follow a conv "
+                    "or fc group head")
             group.append(l)
     if group:
         yield group

@@ -4,17 +4,17 @@ Convolutions are expressed as im2col + GEMM so the *same* forward pass can
 route every GEMM through either jnp (fp32 reference) or the HURRY crossbar
 functional model (`repro.core.crossbar_linear`, int8 bit-sliced with
 optional read noise) — that is how the simulator's accuracy claims are
-computed rather than assumed.  Layer shapes mirror
-``repro.core.workload`` so the scheduler and the functional model describe
-the same networks, and ``make_program_forward`` runs the same nets through
-the compiled ``CrossbarProgram`` path (``repro.program``): the scheduler's
-mount rounds + FB ops executed on the Pallas crossbar kernels.
+computed rather than assumed.  Param init shapes derive from the
+``repro.api.zoo`` builder graphs (the one source of truth for layer
+shapes — the same graphs the scheduler lowers), and
+``make_program_forward`` runs the same nets through the compiled
+``CrossbarProgram`` path (``repro.program``): the scheduler's mount
+rounds + FB ops executed on the Pallas crossbar kernels.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Callable, Optional
 
 import jax
@@ -102,34 +102,22 @@ def maxpool(x: jnp.ndarray, k: int = 2, stride: int = 2) -> jnp.ndarray:
                                  (1, k, k, 1), (1, stride, stride, 1), "VALID")
 
 
-def _init_conv(key, k, cin, cout):
-    wkey, _ = jax.random.split(key)
-    fan_in = k * k * cin
-    w = jax.random.normal(wkey, (k, k, cin, cout)) * jnp.sqrt(2.0 / fan_in)
-    return {"w": w, "b": jnp.zeros((cout,))}
+def _graph_init(net: str) -> Callable[[jax.Array], dict]:
+    """Param init whose shapes derive from the builder graph.
 
-
-def _init_fc(key, fin, fout):
-    w = jax.random.normal(key, (fin, fout)) * jnp.sqrt(2.0 / fin)
-    return {"w": w, "b": jnp.zeros((fout,))}
+    ``repro.api.zoo`` graphs are the one source of truth for layer
+    shapes; the pytree keys are the graph's GEMM layer names, which the
+    handwritten forwards below index by.
+    """
+    def init(key: jax.Array) -> dict:
+        from repro.api.zoo import GRAPHS    # lazy: api builds on models
+        return GRAPHS[net]().init_params(key)
+    return init
 
 
 # ---------------------------------------------------------------------------
 # AlexNet (CIFAR)
 # ---------------------------------------------------------------------------
-
-_ALEX_CONVS = [(3, 64), (64, 192), (192, 384), (384, 256), (256, 256)]
-
-
-def init_alexnet(key: jax.Array) -> dict:
-    keys = jax.random.split(key, 8)
-    params = {f"conv{i+1}": _init_conv(keys[i], 3, cin, cout)
-              for i, (cin, cout) in enumerate(_ALEX_CONVS)}
-    params["fc6"] = _init_fc(keys[5], 256 * 4 * 4, 1024)
-    params["fc7"] = _init_fc(keys[6], 1024, 1024)
-    params["fc8"] = _init_fc(keys[7], 1024, 10)
-    return params
-
 
 def alexnet_forward(params: dict, x: jnp.ndarray,
                     mm: MatmulFn = fp_matmul) -> jnp.ndarray:
@@ -153,21 +141,6 @@ _VGG_CFG = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
             512, 512, 512, "M", 512, 512, 512, "M"]
 
 
-def init_vgg16(key: jax.Array) -> dict:
-    params = {}
-    cin, i = 3, 1
-    keys = jax.random.split(key, 16)
-    ki = 0
-    for v in _VGG_CFG:
-        if v == "M":
-            continue
-        params[f"conv{i}"] = _init_conv(keys[ki], 3, cin, v)
-        cin, i, ki = v, i + 1, ki + 1
-    params["fc1"] = _init_fc(keys[14], 512, 512)
-    params["fc2"] = _init_fc(keys[15], 512, 10)
-    return params
-
-
 def vgg16_forward(params: dict, x: jnp.ndarray,
                   mm: MatmulFn = fp_matmul) -> jnp.ndarray:
     i = 1
@@ -188,22 +161,6 @@ def vgg16_forward(params: dict, x: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 _RESNET_STAGES = [(64, 2, 1), (128, 2, 2), (256, 2, 2), (512, 2, 2)]
-
-
-def init_resnet18(key: jax.Array) -> dict:
-    params = {"conv0": _init_conv(key, 3, 3, 64)}
-    keys = iter(jax.random.split(key, 64))
-    cin = 64
-    for s, (ch, blocks, _) in enumerate(_RESNET_STAGES):
-        for b in range(blocks):
-            pre = f"s{s}b{b}"
-            params[f"{pre}_conv1"] = _init_conv(next(keys), 3, cin, ch)
-            params[f"{pre}_conv2"] = _init_conv(next(keys), 3, ch, ch)
-            if cin != ch:
-                params[f"{pre}_proj"] = _init_conv(next(keys), 1, cin, ch)
-            cin = ch
-    params["fc"] = _init_fc(next(keys), 512, 10)
-    return params
 
 
 def resnet18_forward(params: dict, x: jnp.ndarray,
@@ -234,7 +191,7 @@ class CNNModel:
 
 
 CNN_MODELS = {
-    "alexnet": CNNModel(init_alexnet, alexnet_forward),
-    "vgg16": CNNModel(init_vgg16, vgg16_forward),
-    "resnet18": CNNModel(init_resnet18, resnet18_forward),
+    "alexnet": CNNModel(_graph_init("alexnet"), alexnet_forward),
+    "vgg16": CNNModel(_graph_init("vgg16"), vgg16_forward),
+    "resnet18": CNNModel(_graph_init("resnet18"), resnet18_forward),
 }

@@ -7,6 +7,9 @@ wiring); ``execute.py`` runs the program batched under ``jax.jit`` /
 ``lax.scan``, routing every GEMM through the ``crossbar_gemm`` Pallas
 kernel and every post-op through the fused ``fb_epilogue`` kernel;
 ``serve.py`` is the compile-once / execute-per-batch serving entry.
+``repro.api`` builds the user-facing surface (builder graphs, unified
+``HurryConfig``, persistable ``CompiledModel`` sessions) on top of
+this subsystem.
 """
 
 from .compile import (CrossbarProgram, MountRound, ProgramOp,

@@ -40,11 +40,9 @@ import math
 from repro.core.crossbar import CrossbarConfig
 from repro.core.scheduling import ArrayPlan, plan_array
 from repro.core.simulator import ChipConfig, build_group_requests
-from repro.core.workload import WORKLOADS, LayerSpec, layer_groups
+from repro.core.workload import (WORKLOADS, POST_RANK, input_spec,
+                                 layer_groups)
 
-# canonical FB chain order inside one fused stage (gemm implicit first)
-_POST_RANK = {"residual": 0, "relu": 1, "maxpool": 2, "avgpool": 2,
-              "softmax": 3}
 # workload layer kind -> FB request kind in the ArrayPlan (ReLU merges
 # into the max FB when a pool follows, paper §II-C2)
 _FB_KIND = {"maxpool": ("max",), "relu": ("relu", "max"),
@@ -110,6 +108,18 @@ class CrossbarProgram:
     input: str
     output: str                # final buffer (softmax output when present)
     logits: str                # last GEMM-stage buffer (pre-softmax)
+    # input spec (read off the first layer at compile time); serving
+    # warmup derives its dummy batch from this, never from a hardcoded
+    # CIFAR shape
+    in_hw: int = 32
+    in_ch: int = 3
+    in_features: int = 0       # set instead of hw/ch for fc-first nets
+
+    def input_shape(self, batch: int = 1) -> tuple[int, ...]:
+        """The (batched) input array shape this program was compiled for."""
+        if self.in_features:
+            return (batch, self.in_features)
+        return (batch, self.in_hw, self.in_hw, self.in_ch)
 
     @property
     def n_mount_rounds(self) -> int:
@@ -146,18 +156,30 @@ def _fb_fields(plan: ArrayPlan, kinds: tuple[str, ...]) -> dict:
             "fb_rows": b.rows, "fb_cols": b.cols}
 
 
-def compile_network(net: str | list[LayerSpec], *,
+def compile_network(net, *, config=None,
                     chip: ChipConfig | None = None,
                     cfg: CrossbarConfig | None = None,
                     name: str = "") -> CrossbarProgram:
-    """Lower a workload network (name or LayerSpec list) to a program."""
+    """Lower a network (name, LayerSpec list, or NetworkGraph) to a program.
+
+    ``config`` is a ``repro.api.HurryConfig`` — the unified front-door
+    config from which both the chip geometry and the crossbar numerics
+    derive (one derivation point).  Passing ``chip``/``cfg`` directly
+    remains supported; a missing ``cfg`` comes from the chip's own
+    ``ChipConfig.crossbar`` derivation rather than being re-derived
+    here.
+    """
+    if config is not None:
+        chip = chip or config.chip()
+        cfg = cfg or config.crossbar()
     chip = chip or ChipConfig()
-    cfg = cfg or CrossbarConfig(rows=chip.array_rows,
-                                weight_bits=chip.weight_bits,
-                                input_bits=chip.input_bits)
+    cfg = cfg or chip.crossbar()
     if isinstance(net, str):
         name = name or net
         layers = WORKLOADS[net]()
+    elif hasattr(net, "layers"):          # a repro.api NetworkGraph
+        layers = list(net.layers)
+        name = name or net.name
     else:
         layers = list(net)
         name = name or "custom"
@@ -204,13 +226,13 @@ def compile_network(net: str | list[LayerSpec], *,
         rank = -1
         cur = head.name
         for l in group[1:]:
-            if l.kind not in _POST_RANK:
+            if l.kind not in POST_RANK:
                 raise ValueError(f"unsupported FB op {l.kind} ({l.name})")
-            if _POST_RANK[l.kind] <= rank:
+            if POST_RANK[l.kind] <= rank:
                 raise ValueError(
                     f"group {head.name}: {l.kind} out of canonical FB "
                     "chain order (residual -> relu -> pool -> softmax)")
-            rank = _POST_RANK[l.kind]
+            rank = POST_RANK[l.kind]
             extra: dict = {}
             if l.kind in ("maxpool", "avgpool"):
                 if l.ksize != l.stride:
@@ -233,6 +255,11 @@ def compile_network(net: str | list[LayerSpec], *,
         finals.add(cur)
 
     logits = next(op.dst for op in reversed(ops) if op.kind == "gemm")
+    if hasattr(net, "input_shape"):       # a NetworkGraph carries its spec
+        ihw, ich, ifeat = net.in_hw, net.in_ch, net.in_features
+    else:
+        ihw, ich, ifeat = input_spec(layers)
     return CrossbarProgram(net=name, cfg=cfg, ops=tuple(ops),
                            plans=tuple(plans), input="input",
-                           output=ops[-1].dst, logits=logits)
+                           output=ops[-1].dst, logits=logits,
+                           in_hw=ihw, in_ch=ich, in_features=ifeat)

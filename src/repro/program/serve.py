@@ -4,7 +4,9 @@
 time; each ``ProgramServer`` call runs the jitted executor on one
 request batch (XLA caches one executable per batch shape, so
 steady-state calls are pure execution — the numbers persisted in
-``BENCH_program.json``).
+``BENCH_program.json``).  ``repro.api.CompiledModel`` is the
+full-featured front door (persistable, simulatable); this module stays
+the minimal program-level entry it builds on.
 """
 
 from __future__ import annotations
@@ -33,25 +35,43 @@ class ProgramServer:
     def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
         return self._fn(self.params, x)
 
-    def warmup(self, batch: int = 1, hw: int = 32, ch: int = 3) -> None:
-        """Pay trace + compile for one batch shape ahead of traffic."""
-        jax.block_until_ready(self(jnp.zeros((batch, hw, hw, ch),
-                                             jnp.float32)))
+    def warmup(self, batch: int = 1) -> None:
+        """Pay trace + compile for one batch shape ahead of traffic.
+
+        The dummy batch takes its shape from the compiled program's
+        input spec, so warming up a non-CIFAR network compiles the
+        executable that will actually serve it.
+        """
+        x = jnp.zeros(self.program.input_shape(batch), jnp.float32)
+        jax.block_until_ready(self(x))
 
 
-def make_server(net: str, params: dict | None = None, *,
+def make_server(net, params: dict | None = None, *,
+                config=None,
                 cfg: CrossbarConfig | None = None,
                 chip: ChipConfig | None = None,
                 return_logits: bool = False,
                 seed: int = 0, **exec_kw) -> ProgramServer:
     """Compile ``net`` once and wrap it for per-batch serving.
 
-    ``params`` defaults to a fresh ``models.cnn`` init (the compiled
-    program consumes the exact same parameter pytree as the functional
-    forward).  Extra kwargs go to ``execute_program`` (block sizes).
+    ``config`` is a ``repro.api.HurryConfig``: chip geometry, crossbar
+    numerics, and executor block sizes all derive from it (explicit
+    ``cfg``/``chip``/block-size kwargs still win).  ``params`` defaults
+    to a fresh ``models.cnn`` init for the named paper CNNs (the
+    compiled program consumes the exact same parameter pytree as the
+    functional forward).  Extra kwargs go to ``execute_program``.
     """
+    if config is not None:
+        chip = chip or config.chip()
+        cfg = cfg or config.crossbar()
+        exec_kw.setdefault("block_m", config.block_m)
+        exec_kw.setdefault("block_n", config.block_n)
     program = compile_network(net, chip=chip, cfg=cfg)
     if params is None:
+        if not isinstance(net, str):
+            raise ValueError("params are required for non-registry "
+                             "networks (only the named paper CNNs have "
+                             "a default init)")
         from repro.models.cnn import CNN_MODELS   # lazy: models is optional
         params = CNN_MODELS[net].init(jax.random.PRNGKey(seed))
     fn = jax.jit(lambda p, x: execute_program(

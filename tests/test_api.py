@@ -1,0 +1,235 @@
+"""`repro.api` front-door surface: builder IR, unified config, sessions.
+
+Covers ISSUE 3's acceptance criteria: a user-defined ``NetworkBuilder``
+graph (never touching ``core/workload.py``) compiles, runs bit-exactly
+against the functional crossbar forward under a clip-free config, and
+round-trips through ``save``/``load`` bit-exactly (both sides jitted,
+DESIGN.md §5); the paper CNNs keep working through the ``WORKLOADS``
+compat shim; warmup shapes derive from the compiled program's input
+spec; and malformed graphs fail at build time with the offending layer's
+name.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api import GRAPHS, HurryConfig, NetworkBuilder, NetworkGraph
+from repro.core.crossbar import CrossbarConfig
+from repro.core.simulator import ChipConfig, simulate_hurry
+from repro.core.workload import WORKLOADS, LayerSpec, layer_groups
+from repro.models.cnn import make_crossbar_matmul
+from repro.program import compile_network, make_server
+
+CLIP_FREE = HurryConfig(array_rows=511)      # DESIGN.md §4 predicate holds
+
+
+def _custom_graph() -> NetworkGraph:
+    """A branching custom net — not one of the three paper CNNs."""
+    nb = NetworkBuilder("custom8", input_hw=8, input_ch=4)
+    nb.conv(16, name="c1")
+    r1 = nb.relu(name="r1")
+    proj = nb.conv(24, k=1, padding=0, name="proj", input_from=r1)
+    nb.conv(24, name="c2", input_from=r1)
+    nb.residual(proj, name="res")
+    nb.relu(name="r2")
+    nb.maxpool(name="p1")
+    nb.fc(10, name="fc")
+    nb.softmax(name="sm")
+    return nb.build()
+
+
+def _model_and_input(batch=2, seed=0):
+    graph = _custom_graph()
+    model = api.compile(graph, CLIP_FREE, seed=1)
+    x = jax.random.normal(jax.random.PRNGKey(seed), graph.input_shape(batch))
+    return graph, model, x
+
+
+# ---------------------------------------------------------------------------
+# builder IR: shape inference + build-time validation
+# ---------------------------------------------------------------------------
+
+def test_builder_infers_shapes_and_wiring():
+    graph = _custom_graph()
+    by_name = {l.name: l for l in graph.layers}
+    assert by_name["c1"].out_hw == 8 and by_name["c1"].in_ch == 4
+    assert by_name["proj"].input_from == "r1"
+    assert by_name["res"].residual_from == "proj"
+    assert by_name["p1"].out_hw == 4
+    assert by_name["fc"].features_in == 4 * 4 * 24
+    assert graph.input_shape(3) == (3, 8, 8, 4)
+
+
+def test_builder_rejects_headless_group():
+    nb = NetworkBuilder("bad", input_hw=8, input_ch=3)
+    with pytest.raises(ValueError, match="'relu0'.*precedes any GEMM"):
+        nb.relu(name="relu0")
+
+
+def test_layer_groups_rejects_headless_group():
+    layers = [LayerSpec("lonely_relu", "relu", out_ch=3, out_hw=8),
+              LayerSpec("c", "conv", in_ch=3, out_ch=8, ksize=3, stride=1,
+                        padding=1, in_hw=8, out_hw=8)]
+    with pytest.raises(ValueError, match="'lonely_relu'.*precedes any GEMM"):
+        list(layer_groups(layers))
+
+
+def test_builder_rejects_bad_residual_and_wiring():
+    nb = NetworkBuilder("bad", input_hw=8, input_ch=3)
+    nb.conv(8, name="c1")
+    nb.relu(name="r1")
+    with pytest.raises(ValueError, match="nope"):
+        nb.residual("nope", name="res")
+    nb.conv(16, name="c2")         # 8x8x16: shape mismatch vs r1 (8x8x8)
+    with pytest.raises(ValueError, match="shape"):
+        nb.residual("r1", name="res")
+    with pytest.raises(ValueError, match="duplicate"):
+        nb.conv(8, name="c1")
+    with pytest.raises(ValueError, match="window == stride"):
+        nb.maxpool(k=3, stride=2, name="p")
+
+
+def test_builder_rejects_non_canonical_chain_at_build():
+    nb = NetworkBuilder("bad", input_hw=8, input_ch=3)
+    nb.conv(8, name="c1")
+    nb.maxpool(name="p1")
+    nb.relu(name="r_late")         # relu after pool: out of FB chain order
+    with pytest.raises(ValueError, match="r_late.*canonical"):
+        nb.build()
+
+
+# ---------------------------------------------------------------------------
+# unified HurryConfig: one derivation point
+# ---------------------------------------------------------------------------
+
+def test_hurry_config_derivations_agree():
+    hc = HurryConfig(array_rows=511, adc_bits=9, sim_batch=4)
+    chip, cfg = hc.chip(), hc.crossbar()
+    assert isinstance(chip, ChipConfig) and chip.array_rows == 511
+    assert chip.batch == 4
+    assert isinstance(cfg, CrossbarConfig) and cfg.rows == 511
+    assert cfg.clip_free and hc.clip_free
+    base = hc.baseline()
+    assert base.array_rows == 511 and base.cell_bits == 2   # baseline MLC
+    # lifting a bare ChipConfig goes through the same single point
+    assert HurryConfig.from_chip(chip).crossbar() == cfg
+
+
+def test_compile_and_serve_consume_hurry_config():
+    program = compile_network("alexnet", config=CLIP_FREE)
+    assert program.cfg == CLIP_FREE.crossbar()
+    server = make_server("alexnet", config=CLIP_FREE)
+    assert server.program.cfg == CLIP_FREE.crossbar()
+
+
+def test_simulator_and_baselines_consume_hurry_config():
+    layers = WORKLOADS["alexnet"]()
+    via_api = simulate_hurry(layers, chip=HurryConfig())
+    via_chip = simulate_hurry(layers, chip=ChipConfig())
+    assert via_api.throughput_cycles == via_chip.throughput_cycles
+    assert via_api.energy_pj == via_chip.energy_pj
+
+
+# ---------------------------------------------------------------------------
+# acceptance: custom net bit-exact, save/load roundtrip, compat shim
+# ---------------------------------------------------------------------------
+
+def test_custom_net_bit_exact_vs_functional_forward():
+    """Builder-defined net: compiled program == functional crossbar
+    forward, bitwise, under a clip-free config (both sides jitted)."""
+    graph, model, x = _model_and_input()
+    logits = model.run(x, logits=True)
+    fwd = jax.jit(lambda p, v: graph.forward(
+        p, v, mm=make_crossbar_matmul(CLIP_FREE.crossbar()), logits=True))
+    ref = fwd(model.params, x)
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(ref))
+    np.testing.assert_allclose(
+        np.asarray(model.run(x)),
+        np.asarray(jax.nn.softmax(ref, axis=-1)), atol=1e-7)
+
+
+def test_save_load_roundtrip_bit_exact(tmp_path):
+    """api.load(save(model)).run == model.run, bitwise — serving skips
+    compilation entirely."""
+    _, model, x = _model_and_input()
+    y_mem = model.run(x, logits=True)
+    path = model.save(str(tmp_path / "custom8.npz"))
+    loaded = api.load(path)
+    # static program + config + graph round-trip exactly (plans are
+    # compile-time placement artifacts the executor never reads)
+    assert loaded.config == model.config
+    assert loaded.program.ops == model.program.ops
+    assert loaded.program.cfg == model.program.cfg
+    assert loaded.graph.layers == model.graph.layers
+    y_loaded = loaded.run(x, logits=True)
+    np.testing.assert_array_equal(np.asarray(y_mem), np.asarray(y_loaded))
+    np.testing.assert_array_equal(np.asarray(model.run(x)),
+                                  np.asarray(loaded.run(x)))
+
+
+def test_workloads_shim_matches_zoo_graphs():
+    """The compat shim serves exactly the zoo builder programs."""
+    for net, fn in WORKLOADS.items():
+        assert fn() == list(GRAPHS[net]().layers)
+    # pinned structural facts of the paper graphs
+    alex = {l.name: l for l in WORKLOADS["alexnet"]()}
+    assert alex["conv1"].in_ch == 3 and alex["conv1"].out_hw == 32
+    assert alex["fc6"].features_in == 256 * 4 * 4
+    res = {l.name: l for l in WORKLOADS["resnet18"]()}
+    assert res["s1b0_res"].residual_from == "s1b0_proj"
+    assert res["s1b0_conv1"].input_from == "s0b1_relu2"
+
+
+def test_paper_cnn_through_api_by_name():
+    model = api.compile("alexnet", CLIP_FREE)
+    assert model.graph.name == "alexnet"
+    assert model.program.input_shape(2) == (2, 32, 32, 3)
+    assert {l.kind for l in model.graph.layers} == \
+        {"conv", "relu", "maxpool", "fc", "softmax"}
+
+
+def test_graph_init_params_shapes_are_graph_derived():
+    graph = GRAPHS["alexnet"]()
+    params = graph.init_params(jax.random.PRNGKey(0))
+    assert params["conv1"]["w"].shape == (3, 3, 3, 64)
+    assert params["fc6"]["w"].shape == (256 * 4 * 4, 1024)
+    from repro.models.cnn import CNN_MODELS
+    model_params = CNN_MODELS["alexnet"].init(jax.random.PRNGKey(0))
+    assert jax.tree_util.tree_structure(params) == \
+        jax.tree_util.tree_structure(model_params)
+
+
+# ---------------------------------------------------------------------------
+# serving warmup derives its shape from the program input spec
+# ---------------------------------------------------------------------------
+
+def test_warmup_shape_derived_from_program():
+    graph, model, _ = _model_and_input()
+    assert model.program.input_shape(5) == (5, 8, 8, 4)
+    server = make_server(graph, model.params, config=CLIP_FREE)
+    server.warmup(2)               # non-CIFAR shape: used to hardcode 32x32x3
+    y = server(jnp.zeros(graph.input_shape(2), jnp.float32))
+    assert y.shape == (2, 10)
+
+
+def test_model_simulate_matches_direct_simulator():
+    _, model, _ = _model_and_input()
+    rep = model.simulate()
+    direct = simulate_hurry(list(model.graph.layers),
+                            chip=model.config.chip())
+    assert rep.throughput_cycles == direct.throughput_cycles
+    assert rep.energy_pj == direct.energy_pj
+    assert model.simulate("isaac-128").throughput_cycles > 0
+    with pytest.raises(ValueError, match="unknown arch"):
+        model.simulate("tpu")
+    with pytest.raises(ValueError, match="unknown arch"):
+        model.simulate("isaac-64")
+
+
+def test_summary_mentions_net_and_clip_free():
+    _, model, _ = _model_and_input()
+    s = model.summary()
+    assert "custom8" in s and "clip-free" in s and "gemm" in s
