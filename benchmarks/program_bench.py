@@ -1,12 +1,20 @@
-"""Compiled-program serving benchmark (compile once, execute per batch).
+"""Compiled-program serving benchmark (compile + pack once, execute per batch).
 
-One ``make_server`` per CNN (the compile + jit cost is paid once and
+One ``make_server`` per CNN (compile + pack + jit cost paid once and
 excluded), then steady-state µs per request batch through the full
-crossbar program — every GEMM on the ``crossbar_gemm`` Pallas kernel,
+crossbar program at batch sizes 1/2/4 — every GEMM ONE ``crossbar_gemm``
+dispatch over the kernel's K grid (all row mounts block-activated),
 every post-op on the fused ``fb_epilogue`` kernel (interpret mode on
-CPU).  ``derived`` is the argmax agreement against the functional-model
+CPU).  The default path is the **packed** executor (weights mounted at
+construction; the CI smoke asserts this); ``.../legacy`` rows time the
+params-consuming ``execute_program`` entry, which re-derives the weight
+planes every call — the pre-PR-4 cost profile — so the packed-vs-legacy
+delta is the steady-state win of compile-time weight mounting.
+
+``derived`` is the argmax agreement against the functional-model
 forward under the same clip-free config, which DESIGN.md §5 requires to
-be 1.0 (the two paths are bit-identical there).
+be 1.0 for the packed rows (the two paths are bit-identical there);
+legacy rows carry their agreement against the packed output (also 1.0).
 """
 
 from __future__ import annotations
@@ -18,10 +26,11 @@ import numpy as np
 
 from repro.core.crossbar import CrossbarConfig
 from repro.models.cnn import CNN_MODELS, make_crossbar_matmul
-from repro.program import make_server
+from repro.program import (PackedProgram, compile_network, execute_program,
+                           make_server)
 
 NETS = ("alexnet", "resnet18", "vgg16")
-BATCH = 2
+BATCHES = (1, 2, 4)
 
 
 def _t(fn, iters: int = 2):
@@ -35,15 +44,29 @@ def _t(fn, iters: int = 2):
 def run():
     rows = []
     cfg = CrossbarConfig(rows=511)             # clip-free (DESIGN.md §4)
-    x = jax.random.normal(jax.random.PRNGKey(0), (BATCH, 32, 32, 3))
     for net in NETS:
         m = CNN_MODELS[net]
         params = m.init(jax.random.PRNGKey(1))
         server = make_server(net, params, cfg=cfg, return_logits=True)
-        y_prog, us = _t(lambda: server(x))
-        y_ref = jax.jit(lambda p, v: m.forward(
-            p, v, mm=make_crossbar_matmul(cfg)))(params, x)
-        agree = float((np.argmax(np.asarray(y_prog), 1)
-                       == np.argmax(np.asarray(y_ref), 1)).mean())
-        rows.append((f"program/{net}/b{BATCH}", us, agree))
+        # the CI bench smoke runs this: serving must default to the
+        # packed executor (weights mounted once, not per call)
+        assert isinstance(server.packed, PackedProgram), \
+            "ProgramServer no longer packs by default"
+        program = compile_network(net, cfg=cfg)
+        legacy = jax.jit(lambda p, v: execute_program(
+            program, p, v, return_logits=True))
+        fwd = jax.jit(lambda p, v: m.forward(
+            p, v, mm=make_crossbar_matmul(cfg)))
+        for batch in BATCHES:
+            x = jax.random.normal(jax.random.PRNGKey(0), (batch, 32, 32, 3))
+            y_prog, us = _t(lambda: server(x))
+            y_ref = fwd(params, x)
+            agree = float((np.argmax(np.asarray(y_prog), 1)
+                           == np.argmax(np.asarray(y_ref), 1)).mean())
+            rows.append((f"program/{net}/b{batch}", us, agree))
+            y_leg, us_leg = _t(lambda: legacy(params, x))
+            agree_leg = float((np.argmax(np.asarray(y_leg), 1)
+                               == np.argmax(np.asarray(y_prog), 1)).mean())
+            rows.append((f"program/{net}/b{batch}/legacy", us_leg,
+                         agree_leg))
     return rows

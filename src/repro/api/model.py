@@ -4,13 +4,19 @@ One object unifies the former ``compile_network`` / ``execute_program``
 / ``ProgramServer`` split:
 
     model = api.compile(graph, HurryConfig(array_rows=511))
-    probs = model.run(x)                    # jitted; cached per batch shape
+    probs = model.run(x)                    # jitted; cached per batch bucket
     report = model.simulate()               # cycles/energy/area SimReport
     model.save("model.npz"); m2 = api.load("model.npz")   # skip compile
 
-``run`` keeps one jitted executor per output flavor; XLA caches one
-executable per batch shape underneath, so steady-state calls are pure
-execution.  ``simulate`` runs the analytical chip model on the *same*
+``api.compile`` **packs the weights at compile time**
+(``program/pack.py`` — pre-quantized int8 mount planes, the numeric
+analogue of programming conductances), so ``run`` only ever quantizes
+the input and dispatches kernels; no weight touches float math after
+compile.  ``run`` keeps one jitted executor per output flavor and pads
+incoming batches up to a small bucket ladder (edge replication —
+slice-exact, see ``program/serve.py``), so varying-traffic batch sizes
+share one XLA executable per bucket instead of compiling per exact
+shape.  ``simulate`` runs the analytical chip model on the *same*
 graph the numeric program was compiled from — one network definition,
 both evaluations.
 """
@@ -25,7 +31,9 @@ import jax.numpy as jnp
 from repro.core.baselines import SimReport, simulate_isaac, simulate_misca
 from repro.core.simulator import simulate_hurry
 from repro.program.compile import CrossbarProgram, compile_network
-from repro.program.execute import execute_program
+from repro.program.execute import execute_packed
+from repro.program.pack import PackedProgram, pack_program
+from repro.program.serve import BUCKETS, bucket_batch, pad_batch
 
 from .config import HurryConfig
 from .graph import NetworkBuilder, NetworkGraph
@@ -37,37 +45,47 @@ SIM_ARCHS = ("hurry", "isaac-128", "isaac-256", "isaac-512", "misca")
 
 @dataclasses.dataclass
 class CompiledModel:
-    """A compiled network + params: runnable, simulatable, persistable."""
+    """A compiled+packed network: runnable, simulatable, persistable."""
 
     graph: NetworkGraph
     config: HurryConfig
     program: CrossbarProgram
     params: dict
+    packed: PackedProgram | None = None
+    buckets: tuple[int, ...] = BUCKETS
     _fns: dict = dataclasses.field(default_factory=dict, repr=False,
                                    compare=False)
 
     # -- numeric execution -------------------------------------------------
 
+    def _packed(self) -> PackedProgram:
+        if self.packed is None:   # models built before packing existed
+            self.packed = pack_program(self.program, self.params)
+        return self.packed
+
     def run(self, x: jnp.ndarray, *, logits: bool = False) -> jnp.ndarray:
-        """Execute the compiled program on a batch.
+        """Execute the packed program on a batch.
 
         Returns the program's output buffer (softmax probabilities when
         the graph ends in softmax); ``logits=True`` returns the last
-        GEMM output.  The jitted executor is built once per flavor and
-        XLA caches one executable per batch shape — steady-state calls
-        are pure execution.
+        GEMM output.  The jitted executor is built once per flavor;
+        batches pad up to the model's bucket ladder (slice-exact edge
+        replication) and XLA caches one executable per bucket — varying
+        traffic shapes stay pure execution on ~10 executables.
         """
         fn = self._fns.get(logits)
         if fn is None:
-            program, cfg = self.program, self.config
-            fn = jax.jit(lambda p, v: execute_program(
-                program, p, v, block_m=cfg.block_m, block_n=cfg.block_n,
+            cfg = self.config
+            fn = jax.jit(lambda pk, v: execute_packed(
+                pk, v, block_m=cfg.block_m, block_n=cfg.block_n,
                 return_logits=logits))
             self._fns[logits] = fn
-        return fn(self.params, x)
+        b = x.shape[0]
+        x = pad_batch(x, bucket_batch(b, self.buckets))
+        return fn(self._packed(), x)[:b]
 
     def warmup(self, batch: int = 1, *, logits: bool = False) -> None:
-        """Pay trace + compile for one batch shape ahead of traffic."""
+        """Pay trace + compile for one batch bucket ahead of traffic."""
         x = jnp.zeros(self.program.input_shape(batch), jnp.float32)
         jax.block_until_ready(self.run(x, logits=logits))
 
@@ -104,18 +122,23 @@ class CompiledModel:
         return "\n".join(lines)
 
     def save(self, path: str) -> str:
-        """Persist program + params so serving skips compilation."""
+        """Persist program + params + packed planes: serving skips both
+        compilation and weight re-quantization."""
         return save_model(self, path)
 
 
 def compile(network, config: HurryConfig | None = None, *,
-            params: dict | None = None, seed: int = 0) -> CompiledModel:
+            params: dict | None = None, seed: int = 0,
+            buckets: tuple[int, ...] | None = BUCKETS) -> CompiledModel:
     """Lower a network to a ``CompiledModel`` under one unified config.
 
     ``network`` is a ``NetworkGraph``, a ``NetworkBuilder`` (built
     implicitly), a registry name (``repro.api.zoo``), or a raw
     ``LayerSpec`` list.  ``params`` defaults to the graph-derived He
-    init (``NetworkGraph.init_params``).
+    init (``NetworkGraph.init_params``).  Weights are packed here —
+    ``run`` never re-derives them.  ``buckets`` is the batch-size
+    ladder ``run`` pads up to (None or ``()`` disables bucketing: one
+    executable per exact batch shape).
     """
     config = config or HurryConfig()
     if isinstance(network, str):
@@ -130,7 +153,9 @@ def compile(network, config: HurryConfig | None = None, *,
     if params is None:
         params = graph.init_params(jax.random.PRNGKey(seed))
     return CompiledModel(graph=graph, config=config, program=program,
-                         params=params)
+                         params=params,
+                         packed=pack_program(program, params),
+                         buckets=tuple(buckets or ()))
 
 
 def load(path: str) -> CompiledModel:

@@ -1,22 +1,32 @@
 """Persist compiled models: ``CompiledModel.save`` / ``api.load``.
 
-Format (single ``.npz`` file, version 1):
+Format (single ``.npz`` file, version 2):
 
 * ``__meta__`` — a JSON document holding the graph (name, input spec,
-  ``LayerSpec`` list), the ``HurryConfig``, and the compiled
-  ``CrossbarProgram`` *minus its array plans*: net name, derived
-  ``CrossbarConfig``, the full ``ProgramOp`` list (with ``MountRound``
-  weight slices and FB placements), buffer names, and the input spec.
+  ``LayerSpec`` list), the ``HurryConfig``, the batch-bucket ladder,
+  and the compiled ``CrossbarProgram`` *minus its array plans*: net
+  name, derived ``CrossbarConfig``, the full ``ProgramOp`` list (with
+  ``MountRound`` weight slices and FB placements), buffer names, and
+  the input spec.
 * ``p0 .. pN`` — the parameter arrays, ordered by the ``params`` index
   in the meta document (``[layer, key]`` pairs).
+* ``w0/wa0/wb0 .. `` — the **packed weight planes** (version 2): per
+  GEMM stage the int8 mount-plane matrix (pre-quantized, im2col
+  layout, K padded to full mounts), the f32 weight ``amax``, and the
+  f32 bias, in ``program.stages()`` order.  A loaded model serves from
+  these directly — ``api.load(...).run(...)`` never quantizes a weight
+  (the analogue of shipping a programmed chip, not a netlist).
 
 Array plans are compile-time placement artifacts the executor never
 reads, so a loaded model serves without them (``plans=()``);
 ``CompiledModel.simulate()`` re-derives placement from the graph.
 Everything the jitted executor consumes — ops, tile shapes, mount
-rounds, quantization config, parameters — round-trips exactly, so a
+rounds, quantization config, packed planes — round-trips exactly, so a
 loaded model's ``run`` is bit-identical to the in-memory one and a
-serving process never invokes the compiler.
+serving process never invokes the compiler or the packer.
+
+Version-1 files (pre-packing) still load: the packed planes are
+re-derived once from the saved params at load time (repack fallback).
 """
 
 from __future__ import annotations
@@ -29,12 +39,15 @@ import numpy as np
 
 from repro.core.workload import LayerSpec
 from repro.program.compile import CrossbarProgram, MountRound, ProgramOp
+from repro.program.pack import PackedProgram, PackedStage, pack_program
+from repro.program.serve import BUCKETS
 
 from .config import HurryConfig
 from .graph import NetworkGraph
 
 FORMAT = "repro.api/compiled-model"
-VERSION = 1
+VERSION = 2
+_LOADABLE = (1, 2)
 
 
 def _program_meta(program: CrossbarProgram) -> dict:
@@ -75,6 +88,11 @@ def save_model(model, path: str) -> str:
         for key in sorted(model.params[layer]):
             arrays[f"p{len(index)}"] = np.asarray(model.params[layer][key])
             index.append([layer, key])
+    packed = model._packed()
+    for i, st in enumerate(packed.stages):
+        arrays[f"w{i}"] = np.asarray(st.w8)
+        arrays[f"wa{i}"] = np.asarray(st.w_amax)
+        arrays[f"wb{i}"] = np.asarray(st.bias)
     meta = {
         "format": FORMAT, "version": VERSION,
         "graph": {"name": g.name, "in_hw": g.in_hw, "in_ch": g.in_ch,
@@ -83,6 +101,8 @@ def save_model(model, path: str) -> str:
         "config": dataclasses.asdict(model.config),
         "program": _program_meta(model.program),
         "params": index,
+        "packed_stages": len(packed.stages),
+        "buckets": list(model.buckets),
     }
     with open(path, "wb") as f:
         np.savez(f, __meta__=np.asarray(json.dumps(meta)), **arrays)
@@ -90,23 +110,40 @@ def save_model(model, path: str) -> str:
 
 
 def load_model(path: str):
-    """Load a ``CompiledModel`` saved by ``save_model`` — no compile step."""
+    """Load a ``CompiledModel`` saved by ``save_model`` — no compile step,
+    and (version 2) no weight quantization: the packed planes are read
+    back verbatim."""
     from .model import CompiledModel
     with np.load(path, allow_pickle=False) as z:
         meta = json.loads(str(z["__meta__"][()]))
         if meta.get("format") != FORMAT:
             raise ValueError(f"{path}: not a {FORMAT} file")
-        if meta.get("version") != VERSION:
-            raise ValueError(f"{path}: format version {meta.get('version')}"
-                             f" != supported {VERSION}")
+        version = meta.get("version")
+        if version not in _LOADABLE:
+            raise ValueError(f"{path}: format version {version} not in "
+                             f"supported {_LOADABLE}")
         params: dict = {}
         for i, (layer, key) in enumerate(meta["params"]):
             params.setdefault(layer, {})[key] = jnp.asarray(z[f"p{i}"])
+        stages = tuple(
+            PackedStage(w8=jnp.asarray(z[f"w{i}"]),
+                        w_amax=jnp.asarray(z[f"wa{i}"]),
+                        bias=jnp.asarray(z[f"wb{i}"]))
+            for i in range(meta.get("packed_stages", 0)))
+    program = _program_from_meta(meta["program"])
+    if version == 1:   # pre-packing save: re-derive planes once, now
+        packed = pack_program(program, params)
+    else:
+        n_gemm = sum(1 for op in program.ops if op.kind == "gemm")
+        if len(stages) != n_gemm:
+            raise ValueError(f"{path}: corrupt file — {len(stages)} packed "
+                             f"weight planes for {n_gemm} GEMM stages")
+        packed = PackedProgram(stages=stages, program=program)
     gm = meta["graph"]
     graph = NetworkGraph(
         name=gm["name"], in_hw=gm["in_hw"], in_ch=gm["in_ch"],
         in_features=gm["in_features"],
         layers=tuple(LayerSpec(**d) for d in gm["layers"]))
     return CompiledModel(graph=graph, config=HurryConfig(**meta["config"]),
-                         program=_program_from_meta(meta["program"]),
-                         params=params)
+                         program=program, params=params, packed=packed,
+                         buckets=tuple(meta.get("buckets", BUCKETS)))

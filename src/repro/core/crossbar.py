@@ -187,10 +187,24 @@ def crossbar_matmul(x: jnp.ndarray, w: jnp.ndarray, cfg: CrossbarConfig = Crossb
     return y.reshape(*lead, N)
 
 
+def quantize_scale(amax: jnp.ndarray, bits: int = 8) -> jnp.ndarray:
+    """Symmetric quantization scale from a per-tensor ``max(|x|)``.
+
+    Split out so callers holding a precomputed ``amax`` (e.g. packed
+    weight stages, ``program/pack.py``) derive the scale through the
+    SAME in-graph expression as ``quantize_symmetric`` — XLA's
+    algebraic simplifier rewrites products of divisions, so feeding a
+    pre-divided scale in as a constant lands 1 ulp away from the
+    traced ``(amax/qmax) * (amax'/qmax)`` form.
+    """
+    qmax = (1 << (bits - 1)) - 1
+    return jnp.maximum(amax, 1e-8) / qmax
+
+
 def quantize_symmetric(x: jnp.ndarray, bits: int = 8) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Symmetric per-tensor quantization -> (int values, scale)."""
     qmax = (1 << (bits - 1)) - 1
-    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / qmax
+    scale = quantize_scale(jnp.max(jnp.abs(x)), bits)
     q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax).astype(jnp.int32)
     return q, scale
 

@@ -33,6 +33,14 @@ Two statically-dispatched compute paths (DESIGN.md §"Exact fast path"):
 
 Grid: (M/bm, N/bn, K/rows) — K blocks are the "arrays"; both paths do a
 single MXU dispatch per tile.
+
+Block activation is pad-to-block: operands whose M/N/K are not multiples
+of the (clamped) block sizes are zero-padded up to the next multiple,
+full-size tiles run, and the result is sliced back to (M, N).  Zero rows
+contribute zero bitline counts (digitized exactly: ``clip(0) == 0``) and
+padded output rows/columns are independent of the kept region, so the
+padding is slice-exact on both compute paths — callers with odd spatial
+dims never see a divisibility assert.
 """
 
 from __future__ import annotations
@@ -105,17 +113,32 @@ def _kernel_sliced(x_ref, w_ref, o_ref, acc_ref, *, adc_max: int, n_k: int):
         o_ref[...] = acc_ref[...]
 
 
-def _kernel_exact(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
-    """Clip-free fast path: plain int8 -> int32 GEMM, no bit slicing."""
+def _kernel_exact(x_ref, w_ref, o_ref, acc_ref, *, n_k: int, f32_dot: bool):
+    """Clip-free fast path: plain int8 -> int32 GEMM, no bit slicing.
+
+    When the per-chunk partial sum provably fits f32's integer range
+    (``rows * 128 * 128 <= 2^24``, always true at the paper's ADC
+    resolutions since the exact path requires ``rows <= 2^adc_bits - 1``)
+    the chunk dot runs in f32 — bit-exact, and it hits the fast matmul
+    path on every backend (int32 dot has none on CPU) — with cross-chunk
+    accumulation still in int32.
+    """
     ki = pl.program_id(2)
 
     @pl.when(ki == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jax.lax.dot_general(
-        x_ref[...].astype(jnp.int32), w_ref[...].astype(jnp.int32),
-        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    if f32_dot:
+        y = jax.lax.dot_general(
+            x_ref[...].astype(jnp.float32), w_ref[...].astype(jnp.float32),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(jnp.int32)
+    else:
+        y = jax.lax.dot_general(
+            x_ref[...].astype(jnp.int32), w_ref[...].astype(jnp.int32),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    acc_ref[...] += y
 
     @pl.when(ki == n_k - 1)
     def _done():
@@ -135,6 +158,10 @@ def crossbar_gemm(x: jnp.ndarray, w: jnp.ndarray, *, adc_bits: int = 9,
     ``clip_possible``), else the plane-packed sliced path.  ``exact=False``
     forces the faithful sliced path; ``exact=True`` asserts clip-freeness
     and raises if ADC saturation could fire.
+
+    M, N, and K need not divide the (clamped) block sizes: operands are
+    zero-padded up to the block multiple, full tiles run, and the output
+    is sliced back to (M, N) — slice-exact (see module docstring).
     """
     assert x.dtype == jnp.int8 and w.dtype == jnp.int8
     M, K = x.shape
@@ -143,8 +170,14 @@ def crossbar_gemm(x: jnp.ndarray, w: jnp.ndarray, *, adc_bits: int = 9,
     block_m = min(block_m, M)
     block_n = min(block_n, N)
     rows = min(rows, K)
-    assert M % block_m == 0 and N % block_n == 0 and K % rows == 0
-    n_k = K // rows
+    # pad-to-block activation: zero rows/cols are slice-exact (docstring)
+    pm, pn, pk = -M % block_m, -N % block_n, -K % rows
+    if pm or pk:
+        x = jnp.pad(x, ((0, pm), (0, pk)))
+    if pn or pk:
+        w = jnp.pad(w, ((0, pk), (0, pn)))
+    Mp, Np, Kp = M + pm, N + pn, K + pk
+    n_k = Kp // rows
     if exact is None:
         exact = not clip_possible(rows, adc_bits)
     elif exact and clip_possible(rows, adc_bits):
@@ -152,19 +185,22 @@ def crossbar_gemm(x: jnp.ndarray, w: jnp.ndarray, *, adc_bits: int = 9,
             f"exact=True but ADC clipping can fire: rows={rows} > "
             f"2^{adc_bits} - 1 = {(1 << adc_bits) - 1}; use the sliced path")
     if exact:
-        kernel = functools.partial(_kernel_exact, n_k=n_k)
+        # f32 chunk dots are exact iff |partial| <= rows * 128^2 <= 2^24
+        kernel = functools.partial(_kernel_exact, n_k=n_k,
+                                   f32_dot=rows * 128 * 128 <= 1 << 24)
     else:
         kernel = functools.partial(_kernel_sliced,
                                    adc_max=(1 << adc_bits) - 1, n_k=n_k)
-    return pl.pallas_call(
+    y = pl.pallas_call(
         kernel,
-        grid=(M // block_m, N // block_n, n_k),
+        grid=(Mp // block_m, Np // block_n, n_k),
         in_specs=[
             pl.BlockSpec((block_m, rows), lambda i, j, k: (i, k)),
             pl.BlockSpec((rows, block_n), lambda i, j, k: (k, j)),
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.int32),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
         interpret=interpret,
     )(x, w)
+    return y[:M, :N] if pm or pn else y

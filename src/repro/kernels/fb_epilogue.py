@@ -23,8 +23,15 @@ column-parallel window tiling of Fig 5c.  Only ``stride == window``
 workloads (2x2/2 max pool, 4x4/4 global avg pool).  Softmax needs the
 full feature axis in-tile, so ``block_n`` is forced to N in that mode.
 
-Block sizes must divide (M, N) exactly — the program executor picks
-divisor blocks; on TPU proper, multiples of (8, 128) pick the fast path.
+Block activation is pad-to-block: when (M, N) do not divide the
+(clamped) block sizes, operands are zero-padded up to the block
+multiple, full-size tiles run, and the result is sliced back — every
+row/column is processed independently by the FB chain, so the padding
+is slice-exact and callers never tune divisor blocks.  The two
+structural constraints remain: pooling fixes M to ``B * img_hw^2``
+(images are never padded here), and softmax needs the full feature
+axis in-tile (``block_n = N``, never padded).  On TPU proper,
+multiples of (8, 128) pick the fast path.
 """
 
 from __future__ import annotations
@@ -80,6 +87,21 @@ def fb_epilogue(y: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
     has_residual = residual is not None
     res = residual if has_residual else jnp.zeros((1, 1), jnp.float32)
 
+    # pad-to-block activation (module docstring): pad rows unless pooling
+    # fixes the image structure, pad cols unless softmax spans the full
+    # feature axis; run full tiles, slice back.
+    if softmax:
+        block_n = N              # the tournament needs every logit in-tile
+    block_n = min(block_n, N)
+    pm = 0 if pool != "none" else -M % min(block_m, M)
+    pn = -N % block_n
+    if pm or pn:
+        y = jnp.pad(y, ((0, pm), (0, pn)))
+        bias = jnp.pad(bias, (0, pn))
+        if has_residual:
+            res = jnp.pad(res, ((0, pm), (0, pn)))
+    Mp, Np = M + pm, N + pn
+
     if pool != "none":
         assert not softmax, "pool and softmax FBs never chain directly"
         assert window > 1 and img_hw % window == 0, (img_hw, window)
@@ -87,29 +109,23 @@ def fb_epilogue(y: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
         assert M % img_rows == 0, (M, img_hw)
         n_img = M // img_rows
         oh = img_hw // window
-        block_n = min(block_n, N)
-        assert N % block_n == 0, (N, block_n)
-        grid = (n_img, N // block_n)
+        grid = (n_img, Np // block_n)
         row_spec = pl.BlockSpec((img_rows, block_n), lambda i, j: (i, j))
         out_spec = pl.BlockSpec((oh * oh, block_n), lambda i, j: (i, j))
-        out_shape = jax.ShapeDtypeStruct((n_img * oh * oh, N), jnp.float32)
+        out_shape = jax.ShapeDtypeStruct((n_img * oh * oh, Np), jnp.float32)
     else:
-        if softmax:
-            block_n = N          # the tournament needs every logit in-tile
-        block_m = min(block_m, M)
-        block_n = min(block_n, N)
-        assert M % block_m == 0 and N % block_n == 0, (M, N, block_m, block_n)
-        grid = (M // block_m, N // block_n)
+        block_m = min(block_m, Mp)
+        grid = (Mp // block_m, Np // block_n)
         row_spec = pl.BlockSpec((block_m, block_n), lambda i, j: (i, j))
         out_spec = row_spec
-        out_shape = jax.ShapeDtypeStruct((M, N), jnp.float32)
+        out_shape = jax.ShapeDtypeStruct((Mp, Np), jnp.float32)
 
     res_spec = (row_spec if has_residual
                 else pl.BlockSpec((1, 1), lambda i, j: (0, 0)))
     kernel = functools.partial(_kernel, act=act, pool=pool, window=window,
                                img_hw=img_hw, softmax=softmax,
                                has_residual=has_residual)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -122,3 +138,8 @@ def fb_epilogue(y: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
         out_shape=out_shape,
         interpret=interpret,
     )(y, scale, bias, res)
+    if pn:
+        out = out[:, :N]
+    if pm:                       # never set in pool mode (out rows differ)
+        out = out[:M]
+    return out

@@ -3,10 +3,13 @@
 ``compile.py`` lowers a ``core/workload.py`` network through Algorithms
 1 & 2 + sequence-pair decoding into a static ``CrossbarProgram`` (mount
 rounds + FB ops with concrete tile shapes, weight slices, and buffer
-wiring); ``execute.py`` runs the program batched under ``jax.jit`` /
-``lax.scan``, routing every GEMM through the ``crossbar_gemm`` Pallas
-kernel and every post-op through the fused ``fb_epilogue`` kernel;
-``serve.py`` is the compile-once / execute-per-batch serving entry.
+wiring); ``pack.py`` mounts the weights at compile time (pre-quantized
+int8 planes, conv layout, K padded to full mounts — the numeric
+analogue of programming conductances); ``execute.py`` runs the packed
+program batched under ``jax.jit``, activating all mounts of a stage in
+one ``crossbar_gemm`` K-grid dispatch and every post-op chain in one
+fused ``fb_epilogue`` pass; ``serve.py`` is the compile+pack-once /
+execute-per-batch serving entry with batch-shape bucketing.
 ``repro.api`` builds the user-facing surface (builder graphs, unified
 ``HurryConfig``, persistable ``CompiledModel`` sessions) on top of
 this subsystem.
@@ -14,10 +17,14 @@ this subsystem.
 
 from .compile import (CrossbarProgram, MountRound, ProgramOp,
                       compile_network)
-from .execute import execute_program
-from .serve import ProgramServer, make_server
+from .execute import execute_packed, execute_program
+from .pack import PackedProgram, PackedStage, pack_program
+from .serve import BUCKETS, ProgramServer, bucket_batch, make_server, \
+    pad_batch
 
 __all__ = [
     "CrossbarProgram", "MountRound", "ProgramOp", "compile_network",
-    "execute_program", "ProgramServer", "make_server",
+    "PackedProgram", "PackedStage", "pack_program",
+    "execute_packed", "execute_program",
+    "ProgramServer", "make_server", "BUCKETS", "bucket_batch", "pad_batch",
 ]

@@ -3,16 +3,30 @@
 A pure dataflow interpreter over the program's static op list — the
 scheduled program is *the* thing that computes:
 
-* every GEMM goes through the ``crossbar_gemm`` Pallas kernel (int8
-  operands, per-mount ADC row-chunk semantics).  Multi-mount layers run
-  their row mounts under ``jax.lax.scan`` — the sequential array
-  reconfiguration of the paper, with int32 partial-sum chaining (SnA
-  across stacked arrays);
+* weights are chip-resident: ``pack.pack_program`` pre-quantizes, lays
+  out, and K-pads every stage's weight matrix ONCE (the numeric
+  analogue of programming conductances), so the hot loop only
+  quantizes the *input* — the single data-dependent quantity;
+* every GEMM is ONE ``crossbar_gemm`` Pallas dispatch: the kernel's K
+  grid activates all row mounts of the stage in a single call
+  (``rows=tile_rows`` — each K block is one physical array read with
+  per-mount ADC chunk semantics, partial sums chained in int32 inside
+  the kernel's accumulator: SnA across stacked arrays, bit-identical
+  to the former per-mount ``lax.scan`` because int32 addition is
+  associative);
 * every post-op chain (shift-and-add requant -> bias -> residual ->
   ReLU -> max/avg pool window | softmax) runs in ONE pass of the fused
   ``fb_epilogue`` Pallas kernel over the GEMM output tile, so the
   crossbar output never round-trips through a separate jnp op — the
   numeric analogue of HURRY hiding FB post-ops inside the array.
+
+Both kernels pad-to-block internally (full-size tiles, slice-exact), so
+the executor passes the configured block sizes straight through instead
+of shrinking them to divisors of odd M/N.
+
+Intermediate buffers are dropped as soon as no later stage reads them
+(``src`` or ``res_src``), so an eager forward holds the live frontier
+of the dataflow graph, not every activation of the network.
 
 Quantization mirrors ``core/crossbar.crossbar_linear`` exactly
 (per-tensor symmetric int8 of the full im2col matrix and weight
@@ -21,9 +35,11 @@ bit-identical to the functional-model forward when both are jitted
 (identical FMA contraction; DESIGN.md §5).  Read noise is a
 functional-model-only experiment: the program path models a clean chip.
 
-``execute_program`` is trace-pure; wrap it in ``jax.jit`` with the
+``execute_packed`` is trace-pure; wrap it in ``jax.jit`` with the
 program closed over (see ``serve.ProgramServer``) to compile once and
-execute per request batch.
+execute per request batch.  ``execute_program`` is the
+params-consuming compatibility entry: it packs under the trace, i.e.
+re-derives the weight planes every call — the pre-PR-4 cost profile.
 """
 
 from __future__ import annotations
@@ -31,20 +47,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.crossbar import quantize_symmetric
+from repro.core.crossbar import quantize_scale, quantize_symmetric
 from repro.kernels.crossbar_gemm import crossbar_gemm
 from repro.kernels.fb_epilogue import fb_epilogue
 from repro.kernels.ops import interpret_default
 
 from .compile import CrossbarProgram
-
-
-def _divisor_block(n: int, target: int) -> int:
-    """Largest block size <= target that divides n exactly."""
-    d = min(n, target)
-    while n % d:
-        d -= 1
-    return d
+from .pack import PackedProgram, pack_program
 
 
 def im2col(x: jnp.ndarray, k: int, stride: int, pad: int) -> jnp.ndarray:
@@ -58,82 +67,64 @@ def im2col(x: jnp.ndarray, k: int, stride: int, pad: int) -> jnp.ndarray:
     return patches.transpose(0, 2, 3, 1).reshape(n, oh, ow, c * k * k)
 
 
-def _mounted_gemm(xq: jnp.ndarray, wq: jnp.ndarray, *, tile_rows: int,
-                  adc_bits: int, block_m: int, block_n: int,
-                  interpret: bool) -> jnp.ndarray:
-    """(M, K) x (K, N) int -> int32 via per-mount crossbar reads.
-
-    K is split into ``tile_rows`` mounts (the program's row mount
-    rounds); each mount is one ``crossbar_gemm`` array read whose ADC
-    chunk is exactly the mount, and partial sums chain in int32.
-    Column mounts need no special handling — output columns are
-    independent, so the kernel's N grid covers them.
-    """
-    M, K = xq.shape
-    N = wq.shape[1]
-    x8 = xq.astype(jnp.int8)
-    w8 = wq.astype(jnp.int8)
-    n_tiles = -(-K // tile_rows)
-    kp = n_tiles * tile_rows - K
-    if kp:   # zero rows contribute nothing to any bitline count
-        x8 = jnp.pad(x8, ((0, 0), (0, kp)))
-        w8 = jnp.pad(w8, ((0, kp), (0, 0)))
-    bm = _divisor_block(M, block_m)
-    bn = _divisor_block(N, block_n)
-    if n_tiles == 1:
-        return crossbar_gemm(x8, w8, adc_bits=adc_bits, rows=tile_rows,
-                             block_m=bm, block_n=bn, interpret=interpret)
-    xt = x8.reshape(M, n_tiles, tile_rows).transpose(1, 0, 2)
-    wt = w8.reshape(n_tiles, tile_rows, N)
-
-    def mount(acc, tw):
-        xi, wi = tw
-        y = crossbar_gemm(xi, wi, adc_bits=adc_bits, rows=tile_rows,
-                          block_m=bm, block_n=bn, interpret=interpret)
-        return acc + y, None
-
-    y, _ = jax.lax.scan(mount, jnp.zeros((M, N), jnp.int32), (xt, wt))
-    return y
+def _last_reads(stages) -> dict[str, int]:
+    """Buffer name -> index of the last stage that reads it."""
+    last: dict[str, int] = {}
+    for si, (gemm, posts) in enumerate(stages):
+        last[gemm.src] = si
+        for op in posts:
+            if op.kind == "residual":
+                last[op.res_src] = si
+    return last
 
 
-def execute_program(program: CrossbarProgram, params: dict, x: jnp.ndarray,
-                    *, block_m: int = 512, block_n: int = 512,
-                    interpret: bool | None = None,
-                    return_logits: bool = False) -> jnp.ndarray:
-    """Run the compiled program on a batch ``x`` (B, H, W, C) float32.
+def execute_packed(packed: PackedProgram, x: jnp.ndarray,
+                   *, block_m: int = 512, block_n: int = 512,
+                   interpret: bool | None = None,
+                   return_logits: bool = False) -> jnp.ndarray:
+    """Run a packed program on a batch ``x`` (B, H, W, C) float32.
 
-    Returns the program output buffer — softmax probabilities, or the
-    pre-softmax logits with ``return_logits=True`` (the final stage is
-    re-fused without its softmax FB, mirroring the functional forward).
-    Block sizes are interpret-mode defaults; on TPU proper prefer
-    (128, 128) MXU tiles.
+    The steady-state hot path: weights are already chip-resident int8
+    mount planes (see ``pack.py``), so each stage quantizes its input,
+    makes one ``crossbar_gemm`` dispatch activating every mount, and
+    one fused ``fb_epilogue`` dispatch.  Returns the program output
+    buffer — softmax probabilities, or the pre-softmax logits with
+    ``return_logits=True`` (the final stage is re-fused without its
+    softmax FB, mirroring the functional forward).  Block sizes are
+    interpret-mode defaults; on TPU proper prefer (128, 128) MXU tiles.
     """
     if interpret is None:
         interpret = interpret_default()
+    program = packed.program
     cfg = program.cfg
     bufs: dict[str, jnp.ndarray] = {program.input: x}
     stages = program.stages()
-    for si, (gemm, posts) in enumerate(stages):
+    last = _last_reads(stages)
+    ret = program.logits if return_logits else program.output
+    for si, ((gemm, posts), st) in enumerate(zip(stages, packed.stages)):
         src = bufs[gemm.src]
         if gemm.is_conv:
             cols = im2col(src, gemm.ksize, gemm.stride, gemm.padding)
             b, oh, ow, kk = cols.shape
             xin = cols.reshape(-1, kk)
-            w = params[gemm.param]["w"]
-            wm = w.transpose(2, 0, 1, 3).reshape(kk, -1)
         else:
             if src.ndim == 4:
                 src = src.reshape(src.shape[0], -1)   # NHWC flatten
             xin = src
             b = src.shape[0]
-            wm = params[gemm.param]["w"]
-        bias = params[gemm.param]["b"]
 
         xq, xs = quantize_symmetric(xin, cfg.input_bits)
-        wq, ws = quantize_symmetric(wm, cfg.weight_bits)
-        y_int = _mounted_gemm(xq, wq, tile_rows=gemm.tile_rows,
-                              adc_bits=cfg.adc_bits, block_m=block_m,
+        x8 = xq.astype(jnp.int8)
+        kp = st.w8.shape[0] - x8.shape[1]
+        if kp:   # K was padded to full mounts at pack time; mirror it
+            x8 = jnp.pad(x8, ((0, 0), (0, kp)))
+        y_int = crossbar_gemm(x8, st.w8, adc_bits=cfg.adc_bits,
+                              rows=gemm.tile_rows, block_m=block_m,
                               block_n=block_n, interpret=interpret)
+        # the weight scale divides out of the stored amax IN-GRAPH so the
+        # dequant product keeps the functional reference's HLO shape
+        # (quantize_scale docstring; DESIGN.md §5)
+        ws = quantize_scale(st.w_amax, cfg.weight_bits)
         scale = (xs * ws).astype(jnp.float32).reshape(1, 1)
 
         act, pool, window, img_hw = "none", "none", 0, 0
@@ -156,12 +147,33 @@ def execute_program(program: CrossbarProgram, params: dict, x: jnp.ndarray,
         if softmax and return_logits and si == len(stages) - 1:
             softmax = False
             dst = gemm.dst
-        out = fb_epilogue(y_int, scale, bias, res, act=act, pool=pool,
+        out = fb_epilogue(y_int, scale, st.bias, res, act=act, pool=pool,
                           window=window, img_hw=img_hw, softmax=softmax,
-                          block_m=_divisor_block(y_int.shape[0], block_m),
-                          block_n=_divisor_block(y_int.shape[1], block_n),
+                          block_m=block_m, block_n=block_n,
                           interpret=interpret)
         if gemm.is_conv:
             out = out.reshape(b, out_hw, out_hw, -1)
         bufs[dst] = out
-    return bufs[program.logits if return_logits else program.output]
+        # drop buffers no later stage reads: eager forwards hold only
+        # the live dataflow frontier
+        for name in [n for n, li in last.items() if li <= si]:
+            if name != ret:
+                bufs.pop(name, None)
+                del last[name]
+    return bufs[ret]
+
+
+def execute_program(program: CrossbarProgram, params: dict, x: jnp.ndarray,
+                    *, block_m: int = 512, block_n: int = 512,
+                    interpret: bool | None = None,
+                    return_logits: bool = False) -> jnp.ndarray:
+    """Params-consuming compatibility entry (pre-packing cost profile).
+
+    Packs under the trace — weight planes are re-derived on every call,
+    which is what serving paid before compile-time mounting; servers
+    should pack once and call ``execute_packed`` (``ProgramServer`` and
+    ``api.CompiledModel`` do).  Numerics are identical either way.
+    """
+    return execute_packed(pack_program(program, params), x,
+                          block_m=block_m, block_n=block_n,
+                          interpret=interpret, return_logits=return_logits)

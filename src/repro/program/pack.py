@@ -1,0 +1,123 @@
+"""Weight packing: move weight residency from every forward to compile.
+
+In HURRY (and the ISAAC/FPSA lineage) weights are programmed into
+crossbar conductances **once**; only inputs stream through at inference.
+``pack_program`` is the numeric analogue of that conductance
+programming: given a compiled ``CrossbarProgram`` and its float
+parameter pytree, it pre-computes — once, at pack time — everything
+about the weights that ``execute_program`` used to re-derive on every
+call:
+
+* per-stage symmetric int8 quantization of the full weight matrix
+  (``quantize_symmetric`` at ``cfg.weight_bits``) -> the int8 **mount
+  planes** plus the f32 weight ``amax`` statistic (the O(params)
+  reduction; the executor re-derives the scalar scale in-graph via
+  ``quantize_scale`` so the dequant product keeps the exact HLO shape
+  of the functional reference — see that helper's docstring);
+* the conv im2col layout (``w.transpose(2, 0, 1, 3).reshape(kk, -1)``);
+* K zero-padded up to ``n_mounts * tile_rows`` so every mount round is a
+  full ``tile_rows`` ADC chunk and the executor activates ALL mounts of
+  a stage in one ``crossbar_gemm`` K-grid dispatch (block activation).
+
+The result is a ``PackedProgram`` — a jax pytree whose leaves are the
+per-stage ``(w8, w_amax, bias)`` arrays and whose static treedef
+carries the (plan-free) program — that ``execute_packed`` consumes
+directly.  The hot loop then only quantizes the *input* (the single
+data-dependent quantity) and dispatches kernels; no weight touches
+float math again.  Packing eagerly and quantizing under jit produce
+bit-identical planes: ``quantize_symmetric`` is abs/max/divide/round —
+none of it subject to FMA contraction (DESIGN.md §5).
+
+``repro.api`` persists the packed planes in its save format (version 2),
+so ``api.load(...).run(...)`` never re-derives them (DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.crossbar import quantize_symmetric
+
+from .compile import CrossbarProgram
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PackedStage:
+    """One GEMM stage's chip-resident weights.
+
+    ``w8`` is the int8 mount-plane matrix ``(K_padded, N)`` — im2col
+    layout applied, K padded to ``n_mounts * tile_rows`` so the kernel's
+    K grid is exactly the stage's mount rounds; ``w_amax`` is the f32
+    per-tensor ``max(|w|)`` from which the executor derives the
+    symmetric quantization scale in-graph (``quantize_scale``);
+    ``bias`` the f32 per-column bias.
+    """
+
+    w8: jnp.ndarray
+    w_amax: jnp.ndarray
+    bias: jnp.ndarray
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PackedProgram:
+    """A ``CrossbarProgram`` with weights mounted at pack time.
+
+    ``program`` is static metadata (hashable — packing strips the
+    compile-time array plans, which the executor never reads, exactly
+    as the save format does); ``stages`` holds one ``PackedStage`` per
+    GEMM stage, in ``program.stages()`` order.
+    """
+
+    stages: tuple[PackedStage, ...]
+    program: CrossbarProgram = dataclasses.field(
+        metadata=dict(static=True))
+
+    @property
+    def cfg(self):
+        return self.program.cfg
+
+
+def pack_weight(w: jnp.ndarray, *, is_conv: bool, tile_rows: int,
+                weight_bits: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Float weight -> (int8 mount planes (K_pad, N), f32 amax)."""
+    if is_conv:                 # (k, k, in_ch, out_ch) -> (in_ch*k*k, N)
+        kk = w.shape[0] * w.shape[1] * w.shape[2]
+        w = w.transpose(2, 0, 1, 3).reshape(kk, -1)
+    wq, _ = quantize_symmetric(w, weight_bits)
+    K = w.shape[0]
+    kp = -K % tile_rows         # zero rows add nothing to any bitline count
+    if kp:
+        wq = jnp.pad(wq, ((0, kp), (0, 0)))
+    return wq.astype(jnp.int8), jnp.max(jnp.abs(w)).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def pack_program(program: CrossbarProgram, params: dict) -> PackedProgram:
+    """Mount ``params`` into ``program``: the compile-time analogue of
+    programming the chip's conductances.  Meant to run ONCE outside the
+    per-call hot path (``ProgramServer`` packs at construction,
+    ``api.compile`` at compile time).
+
+    Jitted (program static) so the weight quantization compiles exactly
+    like the jitted functional reference and the in-trace packing of
+    ``execute_program``: eager op-by-op dispatch rounds ``x / scale``
+    one ulp differently on a measure-zero set of boundary values, which
+    would flip the occasional int8 plane entry (DESIGN.md §5/§7).
+    """
+    cfg = program.cfg
+    stages = []
+    for gemm, _ in program.stages():
+        p = params[gemm.param]
+        w8, amax = pack_weight(p["w"], is_conv=gemm.is_conv,
+                               tile_rows=gemm.tile_rows,
+                               weight_bits=cfg.weight_bits)
+        stages.append(PackedStage(w8=w8, w_amax=amax,
+                                  bias=p["b"].astype(jnp.float32)))
+    return PackedProgram(stages=tuple(stages),
+                         program=dataclasses.replace(program, plans=()))

@@ -1,10 +1,20 @@
-"""Batched serving entry: compile once, execute per request batch.
+"""Batched serving entry: compile + pack once, execute per request batch.
 
 ``make_server`` lowers the network to a ``CrossbarProgram`` a single
-time; each ``ProgramServer`` call runs the jitted executor on one
-request batch (XLA caches one executable per batch shape, so
-steady-state calls are pure execution — the numbers persisted in
-``BENCH_program.json``).  ``repro.api.CompiledModel`` is the
+time and **packs the weights at construction** (``pack.pack_program``
+— the numeric analogue of programming the chip's conductances), so
+each ``ProgramServer`` call runs the jitted packed executor on one
+request batch: quantize the input, one ``crossbar_gemm`` dispatch per
+stage, one fused epilogue.  No weight is ever re-quantized in the hot
+path.
+
+Incoming batches are padded up to a small ladder of **bucket sizes**
+(edge-replicating the last request, which preserves every per-tensor
+quantization max exactly, so the kept rows are bit-identical to an
+unpadded run) and the output sliced back — varying-traffic batch
+sizes share one XLA executable per bucket instead of compiling per
+exact shape.  Steady-state numbers are persisted in
+``BENCH_program.json``.  ``repro.api.CompiledModel`` is the
 full-featured front door (persistable, simulatable); this module stays
 the minimal program-level entry it builds on.
 """
@@ -12,7 +22,7 @@ the minimal program-level entry it builds on.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -21,22 +31,55 @@ from repro.core.crossbar import CrossbarConfig
 from repro.core.simulator import ChipConfig
 
 from .compile import CrossbarProgram, compile_network
-from .execute import execute_program
+from .execute import execute_packed
+from .pack import PackedProgram, pack_program
+
+# default batch-bucket ladder: powers of two cover varying traffic with
+# at most 2x padding and ~10 executables total
+BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+
+
+def bucket_batch(b: int, buckets: Sequence[int]) -> int:
+    """Smallest bucket >= b, or b itself beyond the ladder (exact shape).
+
+    Order-insensitive, so a user-supplied unsorted ladder never pads
+    more than the tightest eligible bucket.
+    """
+    return min((s for s in buckets if s >= b), default=b)
+
+
+def pad_batch(x: jnp.ndarray, bucket: int) -> jnp.ndarray:
+    """Pad the batch axis up to ``bucket`` by edge replication.
+
+    Replicating the last request (rather than zero-filling) keeps every
+    per-tensor quantization statistic exact: ``max(|x|)`` over
+    duplicated rows equals the unpadded max at every stage, so the kept
+    rows of a bucketed run are bit-identical to the unbucketed run.
+    """
+    b = x.shape[0]
+    if bucket == b:
+        return x
+    return jnp.pad(x, ((0, bucket - b),) + ((0, 0),) * (x.ndim - 1),
+                   mode="edge")
 
 
 @dataclasses.dataclass
 class ProgramServer:
-    """A compiled network + jitted executor, ready for request batches."""
+    """A compiled+packed network + jitted executor, ready for batches."""
 
     program: CrossbarProgram
     params: dict
-    _fn: Callable[[dict, jnp.ndarray], jnp.ndarray]
+    _fn: Callable[[PackedProgram, jnp.ndarray], jnp.ndarray]
+    packed: PackedProgram | None = None    # always set by make_server
+    buckets: tuple[int, ...] = BUCKETS
 
     def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
-        return self._fn(self.params, x)
+        b = x.shape[0]
+        x = pad_batch(x, bucket_batch(b, self.buckets))
+        return self._fn(self.packed, x)[:b]
 
     def warmup(self, batch: int = 1) -> None:
-        """Pay trace + compile for one batch shape ahead of traffic.
+        """Pay trace + compile for one batch bucket ahead of traffic.
 
         The dummy batch takes its shape from the compiled program's
         input spec, so warming up a non-CIFAR network compiles the
@@ -51,15 +94,21 @@ def make_server(net, params: dict | None = None, *,
                 cfg: CrossbarConfig | None = None,
                 chip: ChipConfig | None = None,
                 return_logits: bool = False,
+                buckets: Sequence[int] | None = BUCKETS,
+                donate_input: bool = False,
                 seed: int = 0, **exec_kw) -> ProgramServer:
-    """Compile ``net`` once and wrap it for per-batch serving.
+    """Compile ``net`` once, pack its weights, and wrap it for serving.
 
     ``config`` is a ``repro.api.HurryConfig``: chip geometry, crossbar
     numerics, and executor block sizes all derive from it (explicit
     ``cfg``/``chip``/block-size kwargs still win).  ``params`` defaults
     to a fresh ``models.cnn`` init for the named paper CNNs (the
     compiled program consumes the exact same parameter pytree as the
-    functional forward).  Extra kwargs go to ``execute_program``.
+    functional forward).  ``buckets`` is the batch-size ladder (None or
+    ``()`` disables bucketing: one executable per exact batch shape).
+    ``donate_input=True`` donates the request batch buffer to XLA —
+    safe only when callers never reuse a batch array after the call.
+    Extra kwargs go to ``execute_packed``.
     """
     if config is not None:
         chip = chip or config.chip()
@@ -74,6 +123,9 @@ def make_server(net, params: dict | None = None, *,
                              "a default init)")
         from repro.models.cnn import CNN_MODELS   # lazy: models is optional
         params = CNN_MODELS[net].init(jax.random.PRNGKey(seed))
-    fn = jax.jit(lambda p, x: execute_program(
-        program, p, x, return_logits=return_logits, **exec_kw))
-    return ProgramServer(program=program, params=params, _fn=fn)
+    packed = pack_program(program, params)
+    fn = jax.jit(lambda pk, x: execute_packed(
+        pk, x, return_logits=return_logits, **exec_kw),
+        donate_argnums=(1,) if donate_input else ())
+    return ProgramServer(program=program, params=params, _fn=fn,
+                         packed=packed, buckets=tuple(buckets or ()))

@@ -233,3 +233,45 @@ def test_summary_mentions_net_and_clip_free():
     _, model, _ = _model_and_input()
     s = model.summary()
     assert "custom8" in s and "clip-free" in s and "gemm" in s
+
+
+# ---------------------------------------------------------------------------
+# batch-shape bucketing: odd traffic shares executables, slice-exact
+# ---------------------------------------------------------------------------
+
+def test_odd_batch_sizes_share_one_executable():
+    """b=5 and b=7 both pad to bucket 8: ONE trace serves both, and the
+    padded run is bit-exact vs an unbucketed model (edge replication
+    preserves every per-tensor quantization max)."""
+    import repro.api.model as apimodel
+    graph, model, _ = _model_and_input()
+    traces = []
+    orig = apimodel.execute_packed
+
+    def spy(pk, v, **kw):
+        traces.append(v.shape[0])
+        return orig(pk, v, **kw)
+
+    apimodel.execute_packed = spy
+    try:
+        x5 = jax.random.normal(jax.random.PRNGKey(5), graph.input_shape(5))
+        x7 = jax.random.normal(jax.random.PRNGKey(7), graph.input_shape(7))
+        y5, y7 = model.run(x5), model.run(x7)
+    finally:
+        apimodel.execute_packed = orig
+    assert traces == [8]            # one bucket-8 executable, no retrace
+    assert y5.shape == (5, 10) and y7.shape == (7, 10)
+    exact = api.compile(graph, CLIP_FREE, seed=1, buckets=())
+    np.testing.assert_array_equal(np.asarray(y5), np.asarray(exact.run(x5)))
+    np.testing.assert_array_equal(np.asarray(y7), np.asarray(exact.run(x7)))
+
+
+def test_buckets_roundtrip_and_packed_by_default(tmp_path):
+    graph, model, x = _model_and_input()
+    assert model.packed is not None          # api.compile packs
+    assert model.buckets[:4] == (1, 2, 4, 8)
+    path = model.save(str(tmp_path / "m.npz"))
+    loaded = api.load(path)
+    assert loaded.buckets == model.buckets
+    assert loaded.packed is not None and len(loaded.packed.stages) == \
+        len(model.packed.stages)

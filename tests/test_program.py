@@ -25,10 +25,10 @@ from repro.core.crossbar import CrossbarConfig
 from repro.core.workload import LayerSpec, WORKLOADS
 from repro.kernels import ref
 from repro.kernels.fb_epilogue import fb_epilogue
+from repro.kernels.crossbar_gemm import crossbar_gemm
 from repro.models.cnn import CNN_MODELS, make_crossbar_matmul, \
     make_program_forward
 from repro.program import compile_network, execute_program, make_server
-from repro.program.execute import _mounted_gemm
 
 NETS = ("alexnet", "vgg16", "resnet18")
 # rows=511 is clip-free (DESIGN.md §4) -> the functional model takes its
@@ -57,13 +57,19 @@ def _ref_logits(m, params, x, cfg):
 
 @pytest.mark.parametrize("net", NETS)
 def test_program_bit_exact_clip_free(net):
-    """execute(compile(net)) == functional forward, bitwise, clip-free."""
+    """Packed server AND legacy executor == functional forward, bitwise,
+    clip-free (both sides jitted — FMA contraction, DESIGN.md §5)."""
     m, params, x = _data(net)
+    ref_logits = _ref_logits(m, params, x, CLIP_FREE)
+    # the packed path: weights mounted once at construction
+    server = make_server(net, params, cfg=CLIP_FREE, return_logits=True)
+    np.testing.assert_array_equal(np.asarray(server(x)),
+                                  np.asarray(ref_logits))
+    # the params-consuming compat entry (packs under the trace)
     program = compile_network(net, cfg=CLIP_FREE)
     logits = jax.jit(lambda p, v: execute_program(
         program, p, v, return_logits=True))(params, x)
     probs = jax.jit(lambda p, v: execute_program(program, p, v))(params, x)
-    ref_logits = _ref_logits(m, params, x, CLIP_FREE)
     np.testing.assert_array_equal(np.asarray(logits), np.asarray(ref_logits))
     np.testing.assert_allclose(
         np.asarray(probs),
@@ -86,14 +92,15 @@ def test_program_tolerance_when_clipping_fires():
     assert np.corrcoef(r.ravel(), o.ravel())[0, 1] > 0.98
 
 
-def test_mounted_gemm_reproduces_adc_saturation():
-    """Per-mount saturation == the bit-sliced oracle at mount chunking."""
-    xq = jnp.ones((8, 972), jnp.int32)     # 2 mounts x 486 all-ones rows
-    wq = jnp.ones((972, 16), jnp.int32)
-    y = _mounted_gemm(xq, wq, tile_rows=486, adc_bits=8,
+def test_single_dispatch_reproduces_per_mount_adc_saturation():
+    """The executor's single K-grid dispatch (rows == tile_rows) keeps
+    per-mount saturation: each K block is one array read, clipped
+    independently — matching the bit-sliced oracle at mount chunking."""
+    xq = jnp.ones((8, 972), jnp.int8)      # 2 mounts x 486 all-ones rows
+    wq = jnp.ones((972, 16), jnp.int8)
+    y = crossbar_gemm(xq, wq, adc_bits=8, rows=486,
                       block_m=512, block_n=512, interpret=True)
-    yr = ref.crossbar_gemm_ref(xq.astype(jnp.int8), wq.astype(jnp.int8),
-                               adc_bits=8, rows=486)
+    yr = ref.crossbar_gemm_ref(xq, wq, adc_bits=8, rows=486)
     np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
     assert int(y[0, 0]) == 2 * 255        # clipped per mount, not 972
 
