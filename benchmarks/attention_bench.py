@@ -1,0 +1,87 @@
+"""Crossbar attention prefill benchmark vs the flash-attention reference.
+
+For each sequence length, a single-attention-layer token-input network
+(``NetworkBuilder(input_seq_dim=D)``) compiles + packs once, then
+steady-state prefill latency is measured through the full crossbar
+program: the fused qkv projection and output projection run on
+compile-time weight mounts, and the Q·Kᵀ / P·V stages run as
+**dynamic-operand GEMMs** — per (batch, head) activation mounts packed
+in-graph and dispatched through ``crossbar_gemm`` with the K grid sized
+to the sequence length (DESIGN.md §9).  The ``flash_attention`` Pallas
+kernel (non-causal, same (B, T, H, hd) geometry) is the digital
+reference point: the same workload with scores kept in fp32 VMEM tiles
+instead of int8 crossbar mounts.
+
+Rows (persisted to ``BENCH_attention.json``):
+
+* ``attention/crossbar_prefill/T{n}`` — µs per prefill batch through the
+  compiled program; ``derived`` is the relative L2 error of the
+  crossbar attention output against the fp32 functional forward of the
+  same graph (the int8 quantization cost of mounting activations —
+  latency is only meaningful next to the fidelity it buys).
+* ``attention/flash/T{n}`` — µs for the flash-attention kernel on the
+  fp32 q/k/v produced by the same projection weights; ``derived`` is
+  the crossbar/flash latency ratio at that sequence length.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import api
+from repro.api import HurryConfig, NetworkBuilder
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ops import interpret_default
+from repro.program.sequence import split_qkv_heads
+
+SEQ_LENS = (16, 64, 256)
+DIM = 64
+HEADS = 4
+BATCH = 1
+
+
+def _t(fn, iters: int = 3):
+    out = jax.block_until_ready(fn())          # warm-up: trace + compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn())
+    return out, (time.perf_counter() - t0) / iters * 1e6
+
+
+def _attention_graph():
+    nb = NetworkBuilder("attn_prefill", input_seq_dim=DIM)
+    nb.attention(HEADS, name="attn")
+    return nb.build()
+
+
+def run():
+    rows = []
+    config = HurryConfig(array_rows=511)       # clip-free (DESIGN.md §4)
+    graph = _attention_graph()
+    model = api.compile(graph, config, buckets=())
+    fp_fwd = jax.jit(lambda p, v: graph.forward(p, v))   # fp32 oracle
+    interpret = interpret_default()
+    p = model.params["attn"]
+    for seq in SEQ_LENS:
+        x = jax.random.normal(jax.random.PRNGKey(seq), (BATCH, seq, DIM))
+        y_cb, us_cb = _t(lambda: model.run(x))
+        y_fp = np.asarray(fp_fwd(model.params, x))
+        rel = float(np.linalg.norm(np.asarray(y_cb) - y_fp)
+                    / np.linalg.norm(y_fp))
+        rows.append((f"attention/crossbar_prefill/T{seq}", us_cb, rel))
+
+        # flash reference on the same projected q/k/v, (B, T, H, hd)
+        qkv = (x.reshape(-1, DIM) @ p["wqkv"] + p["bqkv"]).reshape(
+            BATCH, seq, 3 * DIM)
+        q, k, v = (u.reshape(BATCH, HEADS, seq, DIM // HEADS)
+                   .transpose(0, 2, 1, 3)
+                   for u in split_qkv_heads(qkv, HEADS))
+        _, us_fl = _t(lambda: flash_attention(
+            q, k, v, causal=False, interpret=interpret))
+        rows.append((f"attention/flash/T{seq}", us_fl,
+                     us_cb / max(us_fl, 1e-9)))
+    return rows

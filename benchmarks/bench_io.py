@@ -15,7 +15,7 @@ from typing import Iterable, Tuple
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 # registered persisted sections -> BENCH_<section>.json at the repo root
-SECTIONS = ("kernels", "program", "api")
+SECTIONS = ("kernels", "program", "api", "attention")
 
 Row = Tuple[str, float, float]
 

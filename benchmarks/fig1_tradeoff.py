@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import time
 
-from repro.core import WORKLOADS
+from repro.api.zoo import GRAPHS
 from repro.core.baselines import simulate_isaac
 from repro.core.energy import EnergyModel, adc_bits_for
 from repro.core.area import AreaModel
@@ -20,7 +20,7 @@ from repro.core.area import AreaModel
 def fig1a_spatial_vs_array_size():
     rows = []
     for net in ("alexnet", "vgg16", "resnet18"):
-        layers = WORKLOADS[net]()
+        layers = list(GRAPHS[net]().layers)
         t0 = time.perf_counter()
         for s in (128, 256, 512):
             r = simulate_isaac(layers, s)

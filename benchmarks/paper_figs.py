@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import time
 
-from repro.core import WORKLOADS
+from repro.api.zoo import GRAPHS
 from repro.core.simulator import simulate_hurry
 from repro.core.baselines import simulate_isaac, simulate_misca
 
@@ -25,7 +25,7 @@ def _timed(fn, *args):
 
 
 def _reports(net):
-    layers = WORKLOADS[net]()
+    layers = list(GRAPHS[net]().layers)
     rs = {}
     us = 0.0
     for name, fn, args in [

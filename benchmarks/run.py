@@ -1,23 +1,85 @@
 """Benchmark aggregator: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV.  Sections:
-  paper_figs    — HURRY Figs 6/7/8 + accuracy (simulator-derived)
-  kernels_bench — Pallas kernel microbenches (interpret mode on CPU)
-  program_bench — compiled-program serving (compile once, us per batch)
-  api_bench     — repro.api lifecycle (compile / save / load / run)
-  lm_step       — LM train/serve step wall-times on reduced configs
+  paper_figs      — HURRY Figs 6/7/8 + accuracy (simulator-derived)
+  kernels_bench   — Pallas kernel microbenches (interpret mode on CPU)
+  program_bench   — compiled-program serving (compile once, us per batch)
+  api_bench       — repro.api lifecycle (compile / save / load / run)
+  attention_bench — sequence prefill: crossbar attention vs flash
+  lm_step         — LM train/serve step wall-times on reduced configs
 
-``--section kernels`` (etc.) runs one section only; the kernels,
-program, and api sections also persist their rows to
-``BENCH_<section>.json`` (see ``bench_io``) so future PRs can diff
-timings.
+``--section kernels`` (etc.) runs one section only; the persisted
+sections (``bench_io.SECTIONS``) also write their rows to
+``BENCH_<section>.json`` so future PRs can diff timings.  When a
+persisted section is requested *explicitly* and a previous
+``BENCH_<section>.json`` exists, a one-line timing delta against it is
+printed before the rows are overwritten — regressions surface in CI
+logs without manual JSON diffing.
 """
 
 from __future__ import annotations
 
 import argparse
 
-SECTIONS = ("all", "paper", "kernels", "program", "api", "lm")
+SECTIONS = ("all", "paper", "kernels", "program", "api", "attention", "lm")
+
+# section flag -> (benchmark module name, persisted bench_io section or None)
+_RUNNERS = {
+    "kernels": ("kernels_bench", "kernels"),
+    "program": ("program_bench", "program"),
+    "api": ("api_bench", "api"),
+    "attention": ("attention_bench", "attention"),
+    "lm": ("lm_step", None),
+}
+
+
+def _delta_line(section: str, prev: dict, rows) -> str:
+    """One-line steady-state timing delta vs the previous BENCH json."""
+    old = {name: entry["us_per_call"]
+           for name, entry in prev.get("entries", {}).items()}
+    new = {name: us for name, us, _ in rows}
+    shared = [n for n in new if n in old and old[n] > 0]
+    added, gone = len(new) - len(shared), len(old.keys() - new.keys())
+    if not shared:
+        return (f"bench[{section}] delta vs previous: no shared rows "
+                f"({added} new, {gone} gone)")
+    pcts = sorted((new[n] - old[n]) / old[n] * 100 for n in shared)
+    med = pcts[len(pcts) // 2]
+    worst = max(pcts, key=abs)
+    extra = f", {added} new" if added else ""
+    extra += f", {gone} gone" if gone else ""
+    return (f"bench[{section}] delta vs previous BENCH_{section}.json: "
+            f"median {med:+.1f}% / worst {worst:+.1f}% us_per_call "
+            f"across {len(shared)} shared rows{extra}")
+
+
+def _run_section(flag: str, requested: bool) -> list:
+    """Run one optional section; persists + prints the delta line.
+
+    Sections are skipped on ImportError only under the "all" default;
+    an explicitly requested section must propagate failures.
+    """
+    mod_name, persist = _RUNNERS[flag]
+    try:
+        import importlib
+        mod = importlib.import_module(f"benchmarks.{mod_name}")
+        rows = mod.run()
+    except ImportError:
+        if requested:
+            raise
+        return []
+    if persist is not None:
+        from benchmarks import bench_io
+        prev = None
+        if requested:
+            try:
+                prev = bench_io.read_bench_json(persist)
+            except (FileNotFoundError, ValueError):
+                prev = None
+        bench_io.write_bench_json(persist, rows)
+        if prev is not None:
+            print(_delta_line(persist, prev, rows))
+    return rows
 
 
 def main(argv: list[str] | None = None) -> None:
@@ -32,42 +94,9 @@ def main(argv: list[str] | None = None) -> None:
             rows.extend(fn())
         for fn in paper_figs.ALL:
             rows.extend(fn())
-    # optional sections are skipped on ImportError only under the "all"
-    # default; an explicitly requested section must propagate failures
-    if args.section in ("all", "kernels"):
-        try:
-            from benchmarks import bench_io, kernels_bench
-            krows = kernels_bench.run()
-            bench_io.write_bench_json("kernels", krows)
-            rows.extend(krows)
-        except ImportError:
-            if args.section == "kernels":
-                raise
-    if args.section in ("all", "program"):
-        try:
-            from benchmarks import bench_io, program_bench
-            prows = program_bench.run()
-            bench_io.write_bench_json("program", prows)
-            rows.extend(prows)
-        except ImportError:
-            if args.section == "program":
-                raise
-    if args.section in ("all", "api"):
-        try:
-            from benchmarks import api_bench, bench_io
-            arows = api_bench.run()
-            bench_io.write_bench_json("api", arows)
-            rows.extend(arows)
-        except ImportError:
-            if args.section == "api":
-                raise
-    if args.section in ("all", "lm"):
-        try:
-            from benchmarks import lm_step
-            rows.extend(lm_step.run())
-        except ImportError:
-            if args.section == "lm":
-                raise
+    for flag in _RUNNERS:
+        if args.section in ("all", flag):
+            rows.extend(_run_section(flag, requested=args.section == flag))
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:

@@ -9,17 +9,23 @@ validation), configure the chip/crossbar/executor with one
     report = model.simulate()            # cycles / energy / area
     model.save(path); api.load(path)     # serve without recompiling
 
-The three paper CNNs live in ``repro.api.zoo`` as builder programs
-(``core.workload.WORKLOADS`` remains a thin compat shim over them).
+The three paper CNNs and the ``vit_tiny`` transformer live in
+``repro.api.zoo`` as builder programs (``core.workload.WORKLOADS`` is a
+deprecated compat shim over the CNNs).  Sequence graphs (DESIGN.md §9)
+compile to the same program stack: attention lowers into
+dynamic-operand GEMM stages that mount runtime activations on the
+crossbar per batch.
 """
 
 from .config import HurryConfig
 from .graph import NetworkBuilder, NetworkGraph
 from .model import SIM_ARCHS, CompiledModel, compile, load
-from .zoo import GRAPHS, alexnet_graph, resnet18_graph, vgg16_graph
+from .zoo import (GRAPHS, alexnet_graph, resnet18_graph, vgg16_graph,
+                  vit_tiny, vit_tiny_graph)
 
 __all__ = [
     "HurryConfig", "NetworkBuilder", "NetworkGraph",
     "CompiledModel", "compile", "load", "SIM_ARCHS",
     "GRAPHS", "alexnet_graph", "vgg16_graph", "resnet18_graph",
+    "vit_tiny", "vit_tiny_graph",
 ]

@@ -4,19 +4,33 @@ The builder is the front-door authoring surface — users describe a
 network op by op (``nb.conv(...)``, ``nb.relu()``, ``nb.maxpool()``,
 ``nb.residual(from_=...)``, ``nb.fc(...)``, ``nb.softmax()``) and every
 call infers the output shape from the running input shape, validating as
-it goes: GEMM-headed groups (a non-GEMM layer before any conv/fc is an
+it goes: GEMM-headed groups (a non-GEMM layer before any GEMM head is an
 error naming the layer), known wiring sources, shape-matched residuals,
 window == stride pooling (the only pooling the FB column tiling maps),
 and the canonical FB chain order ``residual -> relu -> pool -> softmax``
 (paper Fig 4a / §II-C2).  Errors surface at *build* time with the
 offending layer's name, not deep inside the compiler.
 
+**Sequence mode** (DESIGN.md §9): the same builder authors transformer
+graphs over ``(T, D)`` token shapes — ``nb.linear(features)``,
+``nb.layernorm()``, ``nb.gelu()``, ``nb.attention(heads)``,
+``nb.seqpool()``.  A spatial buffer entering a sequence op is
+rasterized into ``T = hw^2`` tokens (the ViT patchify transition); a
+network may also start directly in token space via
+``NetworkBuilder(input_seq_dim=D)``, in which case the sequence length
+is a run-time property of the batch (``T`` is tracked as 0 during
+inference of shapes).  The sequence FB chain order is ``residual ->
+gelu -> layernorm -> seqpool`` (post-norm transformer blocks).
+
 The resulting ``NetworkGraph`` is the one source of truth for layer
 shapes: the scheduler consumes its ``LayerSpec`` list, ``init_params``
 derives the parameter pytree from it, and ``forward`` is a generic
 functional interpreter (same primitives as ``models/cnn.py``, GEMMs
 routed through any ``mm`` — fp32 or the crossbar functional model) used
-as the numeric reference for compiled programs.
+as the numeric reference for compiled programs.  Attention routes all
+four of its GEMMs (fused qkv projection, per-head Q·Kᵀ, per-head P·V,
+output projection) through the same ``mm``, so the oracle evaluates the
+crossbar-quantized attention the compiled program executes.
 """
 
 from __future__ import annotations
@@ -27,15 +41,29 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.workload import (LayerSpec, POST_RANK, input_spec,
-                                 layer_groups)
+from repro.core.workload import (GEMM_KINDS, LayerSpec, POST_RANK,
+                                 input_spec, layer_groups)
+from repro.kernels.fb_epilogue import gelu, layer_norm_rows, softmax_rows
 from repro.models.cnn import conv2d, fp_matmul, maxpool
+from repro.program.sequence import (attn_scale, merge_heads,
+                                    split_qkv_heads, tokens)
 
 # shapes are ("spatial", hw, ch) until an fc flattens to ("flat", features)
-_SPATIAL, _FLAT = "spatial", "flat"
+# or a sequence op rasterizes to ("seq", tokens, dim); T == 0 marks a
+# run-time sequence length (sequence-input nets)
+_SPATIAL, _FLAT, _SEQ = "spatial", "flat", "seq"
 _AUTO_PREFIX = {"conv": "conv", "fc": "fc", "relu": "relu",
                 "maxpool": "pool", "avgpool": "avgpool",
-                "residual": "res", "softmax": "softmax"}
+                "residual": "res", "softmax": "softmax",
+                "linear": "lin", "layernorm": "ln", "gelu": "gelu",
+                "attention": "attn", "seqpool": "seqpool"}
+
+
+def _as_tokens(shape: tuple) -> tuple:
+    """Shape-level analogue of ``sequence.tokens``: spatial -> seq."""
+    if shape[0] == _SPATIAL:
+        return (_SEQ, shape[1] * shape[1], shape[2])
+    return shape
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,8 +75,12 @@ class NetworkGraph:
     in_ch: int
     layers: tuple[LayerSpec, ...]
     in_features: int = 0          # set instead of hw/ch for fc-first nets
+    in_seq: int = 0               # model dim for sequence-input nets
 
-    def input_shape(self, batch: int = 1) -> tuple[int, ...]:
+    def input_shape(self, batch: int = 1, seq_len: int = 16
+                    ) -> tuple[int, ...]:
+        if self.in_seq:
+            return (batch, seq_len, self.in_seq)
         if self.in_features:
             return (batch, self.in_features)
         return (batch, self.in_hw, self.in_hw, self.in_ch)
@@ -68,11 +100,24 @@ class NetworkGraph:
                     k, (l.ksize, l.ksize, l.in_ch, l.out_ch)
                 ) * jnp.sqrt(2.0 / fan_in)
                 params[l.name] = {"w": w, "b": jnp.zeros((l.out_ch,))}
-            elif l.kind == "fc":
+            elif l.kind in ("fc", "linear"):
                 w = jax.random.normal(
                     k, (l.features_in, l.features_out)
                 ) * jnp.sqrt(2.0 / l.features_in)
                 params[l.name] = {"w": w, "b": jnp.zeros((l.features_out,))}
+            elif l.kind == "attention":
+                d = l.features_in
+                k1, k2 = jax.random.split(k)
+                params[l.name] = {
+                    "wqkv": jax.random.normal(k1, (d, 3 * d))
+                    * jnp.sqrt(2.0 / d),
+                    "bqkv": jnp.zeros((3 * d,)),
+                    "wo": jax.random.normal(k2, (d, d)) * jnp.sqrt(2.0 / d),
+                    "bo": jnp.zeros((d,)),
+                }
+            elif l.kind == "layernorm":
+                params[l.name] = {"g": jnp.ones((l.features_out,)),
+                                  "b": jnp.zeros((l.features_out,))}
         return params
 
     def forward(self, params: dict, x: jnp.ndarray, *,
@@ -82,10 +127,13 @@ class NetworkGraph:
 
         Interprets the layer list with the same primitives the
         handwritten CNN forwards use, routing every GEMM through ``mm``
-        (``make_crossbar_matmul(cfg)`` for the crossbar model).  Under a
-        clip-free config this matches the compiled-program path bitwise
-        when both are jitted (DESIGN.md §5).  ``logits=True`` returns
-        the last GEMM output (pre-softmax).
+        (``make_crossbar_matmul(cfg)`` for the crossbar model) —
+        including the two *dynamic-operand* GEMMs inside attention,
+        which vmap ``mm`` over the (batch, head) axis exactly as the
+        packed executor vmaps its crossbar dispatch (DESIGN.md §9).
+        Under a clip-free config this matches the compiled-program path
+        bitwise when both are jitted (DESIGN.md §5).  ``logits=True``
+        returns the last GEMM output (pre-softmax).
         """
         bufs: dict[str, jnp.ndarray] = {"input": x}
         cur = "input"
@@ -103,8 +151,33 @@ class NetworkGraph:
                 p = params[l.name]
                 y = mm(src, p["w"]) + p["b"]
                 last_gemm = l.name
+            elif l.kind == "linear":
+                src = tokens(bufs[l.input_from or cur])
+                b, t, d = src.shape
+                p = params[l.name]
+                y = (mm(src.reshape(b * t, d), p["w"])
+                     + p["b"]).reshape(b, t, -1)
+                last_gemm = l.name
+            elif l.kind == "attention":
+                src = tokens(bufs[l.input_from or cur])
+                b, t, d = src.shape
+                p = params[l.name]
+                qkv = mm(src.reshape(b * t, d), p["wqkv"]) + p["bqkv"]
+                q, kk, v = split_qkv_heads(qkv.reshape(b, t, 3 * d),
+                                           l.heads)
+                scores = jax.vmap(lambda a, w: mm(a, w.T))(q, kk)
+                probs = softmax_rows(scores * attn_scale(d // l.heads))
+                ctx = merge_heads(jax.vmap(mm)(probs, v), l.heads)
+                y = (mm(ctx.reshape(b * t, d), p["wo"])
+                     + p["bo"]).reshape(b, t, d)
+                last_gemm = l.name
             elif l.kind == "relu":
                 y = jax.nn.relu(bufs[cur])
+            elif l.kind == "gelu":
+                y = gelu(bufs[cur])
+            elif l.kind == "layernorm":
+                p = params[l.name]
+                y = layer_norm_rows(tokens(bufs[cur]), p["g"], p["b"])
             elif l.kind == "maxpool":
                 y = maxpool(bufs[cur], l.ksize, l.stride)
             elif l.kind == "avgpool":
@@ -112,8 +185,12 @@ class NetworkGraph:
                 b, h, w_, c = v.shape
                 y = v.reshape(b, h // l.ksize, l.ksize,
                               w_ // l.ksize, l.ksize, c).mean(axis=(2, 4))
+            elif l.kind == "seqpool":
+                y = tokens(bufs[cur]).mean(axis=1)
             elif l.kind == "residual":
-                y = bufs[cur] + bufs[l.residual_from]
+                a = bufs[cur]
+                r = bufs[l.residual_from]
+                y = a + (tokens(r) if a.ndim == 3 else r)
             elif l.kind == "softmax":
                 y = jax.nn.softmax(bufs[cur], axis=-1)
             else:
@@ -134,9 +211,9 @@ class NetworkGraph:
             raise ValueError("empty network")
         for _ in layer_groups(list(layers)):   # raises on headless groups
             pass
-        ihw, ich, ifeat = input_spec(list(layers))
+        ihw, ich, ifeat, iseq = input_spec(list(layers))
         return cls(name=name, in_hw=ihw, in_ch=ich, in_features=ifeat,
-                   layers=layers)
+                   in_seq=iseq, layers=layers)
 
 
 class NetworkBuilder:
@@ -145,20 +222,33 @@ class NetworkBuilder:
     Every method appends one layer, infers its output shape, validates,
     and returns the layer's name (usable as ``input_from=`` /
     ``from_=`` wiring for branches).  ``build()`` returns the immutable
-    ``NetworkGraph``.
+    ``NetworkGraph``.  Pass ``input_hw``/``input_ch`` for image-input
+    nets or ``input_seq_dim`` for token-input nets ((B, T, D) batches
+    with T chosen at run time).
     """
 
-    def __init__(self, name: str = "custom", *, input_hw: int,
-                 input_ch: int):
+    def __init__(self, name: str = "custom", *, input_hw: int = 0,
+                 input_ch: int = 0, input_seq_dim: int = 0):
+        has_img = bool(input_hw or input_ch)
+        if bool(input_seq_dim) == has_img:
+            raise ValueError(
+                f"{name}: pass either input_hw+input_ch (image input) or "
+                "input_seq_dim (token input)")
+        if has_img and not (input_hw and input_ch):
+            raise ValueError(
+                f"{name}: image input needs BOTH input_hw and input_ch "
+                f"(got hw={input_hw}, ch={input_ch})")
         self.name = name
-        self._in = (input_hw, input_ch)
+        self._in = (input_hw, input_ch, input_seq_dim)
         self._layers: list[LayerSpec] = []
         self._shapes: dict[str, tuple] = {
-            "input": (_SPATIAL, input_hw, input_ch)}
+            "input": ((_SEQ, 0, input_seq_dim) if input_seq_dim
+                      else (_SPATIAL, input_hw, input_ch))}
         self._cur = "input"
         self._finals = {"input"}      # materialized group-final buffers
         self._counts: dict[str, int] = {}
         self._has_gemm = False
+        self._head_kind = ""          # kind of the current group's head
 
     # -- internals ---------------------------------------------------------
 
@@ -175,6 +265,8 @@ class NetworkBuilder:
         if src not in self._shapes:
             raise ValueError(f"{name}: unknown input layer {src!r}")
         shape = self._shapes[src]
+        if want == _SEQ:
+            shape = _as_tokens(shape)      # spatial rasterizes into tokens
         if shape[0] != want:
             raise ValueError(
                 f"{name}: needs a {want} input, but {src!r} produces "
@@ -185,8 +277,39 @@ class NetworkBuilder:
         if not self._has_gemm:
             raise ValueError(
                 f"layer {name!r} ({kind}) precedes any GEMM layer; every "
-                "relu/pool/residual/softmax must follow a conv or fc "
-                "group head (HURRY schedules GEMM-headed FB groups)")
+                "post-op must follow a GEMM group head — conv/fc, or "
+                "linear/attention for sequence chains (HURRY schedules "
+                "GEMM-headed FB groups)")
+
+    def _require_seq_head(self, name: str, kind: str) -> None:
+        """Sequence FBs only fuse onto linear/attention-headed groups.
+
+        A conv/fc group cannot host them (the compiler's CNN lowering
+        has no such FB requests), so reject at build time with the
+        layer named rather than deep inside ``compile_network``.
+        """
+        self._require_gemm(name, kind)
+        if self._head_kind not in ("linear", "attention"):
+            raise ValueError(
+                f"layer {name!r} ({kind}) is a sequence FB but its group "
+                f"head is a {self._head_kind}; gelu/layernorm/seqpool "
+                "fuse onto linear or attention group heads only")
+
+    def _open_group(self, name: str, input_from: str, kind: str) -> str:
+        """A new GEMM closes the previous group: its output materializes.
+
+        Returns the resolved source name; validates explicit wiring only
+        targets materialized group-final buffers.
+        """
+        self._finals = self._finals | {self._cur}
+        src = input_from or self._cur
+        if input_from and input_from not in self._finals:
+            raise ValueError(
+                f"{name}: input_from={input_from!r} is not a materialized "
+                "group output (only group-final buffers are wired)")
+        self._has_gemm = True
+        self._head_kind = kind
+        return src
 
     def _add(self, spec: LayerSpec, shape: tuple) -> str:
         self._layers.append(spec)
@@ -200,20 +323,12 @@ class NetworkBuilder:
              padding: int = 1, *, name: str | None = None,
              input_from: str = "") -> str:
         name = self._name("conv", name)
-        # a new GEMM closes the previous group: its output materializes
-        finals = self._finals | {self._cur}
-        src = input_from or self._cur
+        src = self._open_group(name, input_from, "conv")
         _, hw, ch = self._src_shape(name, src, _SPATIAL)
-        if input_from and input_from not in finals:
-            raise ValueError(
-                f"{name}: input_from={input_from!r} is not a materialized "
-                "group output (only group-final buffers are wired)")
         out_hw = (hw + 2 * padding - k) // stride + 1
         if out_hw <= 0:
             raise ValueError(f"{name}: {k}x{k}/s{stride}/p{padding} conv "
                              f"over {hw}x{hw} input has no output")
-        self._finals = finals
-        self._has_gemm = True
         return self._add(
             LayerSpec(name, "conv", in_ch=ch, out_ch=out_ch, ksize=k,
                       stride=stride, padding=padding, in_hw=hw,
@@ -223,23 +338,46 @@ class NetworkBuilder:
     def fc(self, features_out: int, *, name: str | None = None,
            input_from: str = "") -> str:
         name = self._name("fc", name)
-        finals = self._finals | {self._cur}
-        src = input_from or self._cur
-        if input_from and input_from not in finals:
-            raise ValueError(
-                f"{name}: input_from={input_from!r} is not a materialized "
-                "group output (only group-final buffers are wired)")
+        src = self._open_group(name, input_from, "fc")
         shape = self._shapes.get(src)
         if shape is None:
             raise ValueError(f"{name}: unknown input layer {src!r}")
         fin = shape[1] * shape[1] * shape[2] if shape[0] == _SPATIAL \
             else shape[1]
-        self._finals = finals
-        self._has_gemm = True
         return self._add(
             LayerSpec(name, "fc", features_in=fin,
                       features_out=features_out, input_from=input_from),
             (_FLAT, features_out))
+
+    def linear(self, features_out: int, *, name: str | None = None,
+               input_from: str = "") -> str:
+        """Sequence GEMM: (T, D) -> (T, features_out), tokens in M."""
+        name = self._name("linear", name)
+        src = self._open_group(name, input_from, "linear")
+        _, t, d = self._src_shape(name, src, _SEQ)
+        return self._add(
+            LayerSpec(name, "linear", features_in=d,
+                      features_out=features_out, input_from=input_from),
+            (_SEQ, t, features_out))
+
+    def attention(self, heads: int, *, name: str | None = None,
+                  input_from: str = "") -> str:
+        """Multi-head self-attention over the token buffer, (T, D)->(T, D).
+
+        One builder op; the program compiler expands it into the fused
+        qkv projection, the two dynamic-operand GEMM stages (Q·Kᵀ with a
+        fused softmax FB, P·V), and the output projection (DESIGN.md §9).
+        """
+        name = self._name("attention", name)
+        src = self._open_group(name, input_from, "attention")
+        _, t, d = self._src_shape(name, src, _SEQ)
+        if heads < 1 or d % heads:
+            raise ValueError(
+                f"{name}: {heads} heads do not divide model dim {d}")
+        return self._add(
+            LayerSpec(name, "attention", features_in=d, features_out=d,
+                      heads=heads, input_from=input_from),
+            (_SEQ, t, d))
 
     def relu(self, *, name: str | None = None) -> str:
         name = self._name("relu", name)
@@ -248,8 +386,33 @@ class NetworkBuilder:
         if shape[0] == _SPATIAL:
             spec = LayerSpec(name, "relu", out_ch=shape[2], out_hw=shape[1])
         else:
-            spec = LayerSpec(name, "relu", features_out=shape[1])
+            spec = LayerSpec(name, "relu", features_out=shape[-1])
         return self._add(spec, shape)
+
+    def gelu(self, *, name: str | None = None) -> str:
+        """GELU FB (sequence chains; the LUT analogue of the relu FB)."""
+        name = self._name("gelu", name)
+        self._require_seq_head(name, "gelu")
+        shape = self._src_shape(name, self._cur, _SEQ)
+        return self._add(
+            LayerSpec(name, "gelu", features_out=shape[2]), shape)
+
+    def layernorm(self, *, name: str | None = None) -> str:
+        """Layer norm FB over the feature axis of a token buffer."""
+        name = self._name("layernorm", name)
+        self._require_seq_head(name, "layernorm")
+        shape = self._src_shape(name, self._cur, _SEQ)
+        return self._add(
+            LayerSpec(name, "layernorm", features_out=shape[2]), shape)
+
+    def seqpool(self, *, name: str | None = None) -> str:
+        """Mean-pool the token axis: (T, D) -> flat (D,) (ViT-style head)."""
+        name = self._name("seqpool", name)
+        self._require_seq_head(name, "seqpool")
+        shape = self._src_shape(name, self._cur, _SEQ)
+        return self._add(
+            LayerSpec(name, "seqpool", features_out=shape[2]),
+            (_FLAT, shape[2]))
 
     def _pool(self, kind: str, k: int, stride: int,
               name: str | None) -> str:
@@ -284,15 +447,21 @@ class NetworkBuilder:
                 f"{name}: residual source {from_!r} is not a materialized "
                 "group output (it must be a previous group's final buffer)")
         shape = self._shapes[self._cur]
-        if self._shapes[from_] != shape:
+        src_shape = self._shapes[from_]
+        if shape[0] == _SEQ:           # spatial addends rasterize to tokens
+            src_shape = _as_tokens(src_shape)
+        if src_shape != shape:
             raise ValueError(
                 f"{name}: residual source {from_!r} shape "
-                f"{self._shapes[from_][1:]} != current {shape[1:]}")
-        _, hw, ch = self._src_shape(name, self._cur, _SPATIAL)
-        return self._add(
-            LayerSpec(name, "residual", out_ch=ch, out_hw=hw,
-                      residual_from=from_),
-            shape)
+                f"{src_shape[1:]} != current {shape[1:]}")
+        if shape[0] == _SEQ:
+            spec = LayerSpec(name, "residual", features_out=shape[2],
+                             residual_from=from_)
+        else:
+            _, hw, ch = self._src_shape(name, self._cur, _SPATIAL)
+            spec = LayerSpec(name, "residual", out_ch=ch, out_hw=hw,
+                             residual_from=from_)
+        return self._add(spec, shape)
 
     def softmax(self, *, name: str | None = None) -> str:
         name = self._name("softmax", name)
@@ -315,9 +484,10 @@ class NetworkBuilder:
                 if POST_RANK[l.kind] <= rank:
                     raise ValueError(
                         f"{l.name}: {l.kind} out of canonical FB chain "
-                        "order (residual -> relu -> pool -> softmax) in "
+                        "order (residual -> relu|gelu -> pool -> "
+                        "layernorm -> seqpool -> softmax) in "
                         f"group {group[0].name!r}")
                 rank = POST_RANK[l.kind]
-        hw, ch = self._in
+        hw, ch, seq = self._in
         return NetworkGraph(name=self.name, in_hw=hw, in_ch=ch,
-                            layers=tuple(self._layers))
+                            in_seq=seq, layers=tuple(self._layers))

@@ -84,9 +84,15 @@ class CompiledModel:
         x = pad_batch(x, bucket_batch(b, self.buckets))
         return fn(self._packed(), x)[:b]
 
-    def warmup(self, batch: int = 1, *, logits: bool = False) -> None:
-        """Pay trace + compile for one batch bucket ahead of traffic."""
-        x = jnp.zeros(self.program.input_shape(batch), jnp.float32)
+    def warmup(self, batch: int = 1, *, logits: bool = False,
+               seq_len: int = 16) -> None:
+        """Pay trace + compile for one batch bucket ahead of traffic.
+
+        ``seq_len`` sizes the dummy token axis of sequence-input
+        programs (image/fc-input programs ignore it).
+        """
+        x = jnp.zeros(self.program.input_shape(batch, seq_len=seq_len),
+                      jnp.float32)
         jax.block_until_ready(self.run(x, logits=logits))
 
     # -- analytical evaluation --------------------------------------------
@@ -100,6 +106,13 @@ class CompiledModel:
         """
         if arch not in SIM_ARCHS:
             raise ValueError(f"unknown arch {arch!r}; one of {SIM_ARCHS}")
+        from repro.core.workload import SEQ_KINDS
+        if any(l.kind in SEQ_KINDS for l in self.graph.layers):
+            raise ValueError(
+                f"{self.graph.name}: the analytical chip model does not "
+                "cover sequence workloads yet (dynamic-operand mounts "
+                "have no Algorithm 1/2 placement); numeric execution "
+                "via .run() is fully supported")
         layers = list(self.graph.layers)
         if arch == "hurry":
             return simulate_hurry(layers, chip=self.config.chip(),

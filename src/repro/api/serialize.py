@@ -1,6 +1,6 @@
 """Persist compiled models: ``CompiledModel.save`` / ``api.load``.
 
-Format (single ``.npz`` file, version 2):
+Format (single ``.npz`` file, version 3):
 
 * ``__meta__`` — a JSON document holding the graph (name, input spec,
   ``LayerSpec`` list), the ``HurryConfig``, the batch-bucket ladder,
@@ -10,12 +10,22 @@ Format (single ``.npz`` file, version 2):
   the input spec.
 * ``p0 .. pN`` — the parameter arrays, ordered by the ``params`` index
   in the meta document (``[layer, key]`` pairs).
-* ``w0/wa0/wb0 .. `` — the **packed weight planes** (version 2): per
-  GEMM stage the int8 mount-plane matrix (pre-quantized, im2col
+* ``w0/wa0/wb0 .. `` — the **packed weight planes** (since version 2):
+  per GEMM stage the int8 mount-plane matrix (pre-quantized, im2col
   layout, K padded to full mounts), the f32 weight ``amax``, and the
   f32 bias, in ``program.stages()`` order.  A loaded model serves from
   these directly — ``api.load(...).run(...)`` never quantizes a weight
   (the analogue of shipping a programmed chip, not a netlist).
+* ``wg{i}/wh{i}`` — (version 3) the fused layer-norm FB's gamma/beta
+  for stages listed in the meta's ``ln_stages``.
+
+Version 3 extends version 2 for graphs containing **dynamic-operand
+stages** (attention, DESIGN.md §9): sequence fields ride on the graph /
+program meta (``in_seq``, per-op ``dyn``/``heads``/``post_scale``/
+``w_key`` fields), dynamic stages persist as 0-sized placeholder planes
+(their operands mount per batch at run time), and layer-norm FB
+parameters ride next to the planes so the packed executor never
+touches the float param pytree.
 
 Array plans are compile-time placement artifacts the executor never
 reads, so a loaded model serves without them (``plans=()``);
@@ -27,6 +37,7 @@ serving process never invokes the compiler or the packer.
 
 Version-1 files (pre-packing) still load: the packed planes are
 re-derived once from the saved params at load time (repack fallback).
+Version-2 files load unchanged (no sequence fields, no ln stages).
 """
 
 from __future__ import annotations
@@ -38,16 +49,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.workload import LayerSpec
-from repro.program.compile import CrossbarProgram, MountRound, ProgramOp
-from repro.program.pack import PackedProgram, PackedStage, pack_program
+from repro.program.compile import (GEMM_OPS, CrossbarProgram, MountRound,
+                                   ProgramOp)
+from repro.program.pack import (PackedProgram, PackedStage, pack_program)
 from repro.program.serve import BUCKETS
 
 from .config import HurryConfig
 from .graph import NetworkGraph
 
 FORMAT = "repro.api/compiled-model"
-VERSION = 2
-_LOADABLE = (1, 2)
+VERSION = 3
+_LOADABLE = (1, 2, 3)
 
 
 def _program_meta(program: CrossbarProgram) -> dict:
@@ -60,7 +72,8 @@ def _program_meta(program: CrossbarProgram) -> dict:
     return {"net": program.net, "cfg": dataclasses.asdict(program.cfg),
             "ops": ops, "input": program.input, "output": program.output,
             "logits": program.logits, "in_hw": program.in_hw,
-            "in_ch": program.in_ch, "in_features": program.in_features}
+            "in_ch": program.in_ch, "in_features": program.in_features,
+            "in_seq": program.in_seq}
 
 
 def _program_from_meta(meta: dict) -> CrossbarProgram:
@@ -76,7 +89,7 @@ def _program_from_meta(meta: dict) -> CrossbarProgram:
         ops=tuple(ops), plans=(), input=meta["input"],
         output=meta["output"], logits=meta["logits"],
         in_hw=meta["in_hw"], in_ch=meta["in_ch"],
-        in_features=meta["in_features"])
+        in_features=meta["in_features"], in_seq=meta.get("in_seq", 0))
 
 
 def save_model(model, path: str) -> str:
@@ -89,19 +102,25 @@ def save_model(model, path: str) -> str:
             arrays[f"p{len(index)}"] = np.asarray(model.params[layer][key])
             index.append([layer, key])
     packed = model._packed()
+    ln_stages = []
     for i, st in enumerate(packed.stages):
         arrays[f"w{i}"] = np.asarray(st.w8)
         arrays[f"wa{i}"] = np.asarray(st.w_amax)
         arrays[f"wb{i}"] = np.asarray(st.bias)
+        if st.ln_g is not None:
+            ln_stages.append(i)
+            arrays[f"wg{i}"] = np.asarray(st.ln_g)
+            arrays[f"wh{i}"] = np.asarray(st.ln_b)
     meta = {
         "format": FORMAT, "version": VERSION,
         "graph": {"name": g.name, "in_hw": g.in_hw, "in_ch": g.in_ch,
-                  "in_features": g.in_features,
+                  "in_features": g.in_features, "in_seq": g.in_seq,
                   "layers": [dataclasses.asdict(l) for l in g.layers]},
         "config": dataclasses.asdict(model.config),
         "program": _program_meta(model.program),
         "params": index,
         "packed_stages": len(packed.stages),
+        "ln_stages": ln_stages,
         "buckets": list(model.buckets),
     }
     with open(path, "wb") as f:
@@ -111,7 +130,7 @@ def save_model(model, path: str) -> str:
 
 def load_model(path: str):
     """Load a ``CompiledModel`` saved by ``save_model`` — no compile step,
-    and (version 2) no weight quantization: the packed planes are read
+    and (version >= 2) no weight quantization: the packed planes are read
     back verbatim."""
     from .model import CompiledModel
     with np.load(path, allow_pickle=False) as z:
@@ -125,16 +144,19 @@ def load_model(path: str):
         params: dict = {}
         for i, (layer, key) in enumerate(meta["params"]):
             params.setdefault(layer, {})[key] = jnp.asarray(z[f"p{i}"])
+        ln = set(meta.get("ln_stages", ()))
         stages = tuple(
             PackedStage(w8=jnp.asarray(z[f"w{i}"]),
                         w_amax=jnp.asarray(z[f"wa{i}"]),
-                        bias=jnp.asarray(z[f"wb{i}"]))
+                        bias=jnp.asarray(z[f"wb{i}"]),
+                        ln_g=jnp.asarray(z[f"wg{i}"]) if i in ln else None,
+                        ln_b=jnp.asarray(z[f"wh{i}"]) if i in ln else None)
             for i in range(meta.get("packed_stages", 0)))
     program = _program_from_meta(meta["program"])
     if version == 1:   # pre-packing save: re-derive planes once, now
         packed = pack_program(program, params)
     else:
-        n_gemm = sum(1 for op in program.ops if op.kind == "gemm")
+        n_gemm = sum(1 for op in program.ops if op.kind in GEMM_OPS)
         if len(stages) != n_gemm:
             raise ValueError(f"{path}: corrupt file — {len(stages)} packed "
                              f"weight planes for {n_gemm} GEMM stages")
@@ -142,7 +164,7 @@ def load_model(path: str):
     gm = meta["graph"]
     graph = NetworkGraph(
         name=gm["name"], in_hw=gm["in_hw"], in_ch=gm["in_ch"],
-        in_features=gm["in_features"],
+        in_features=gm["in_features"], in_seq=gm.get("in_seq", 0),
         layers=tuple(LayerSpec(**d) for d in gm["layers"]))
     return CompiledModel(graph=graph, config=HurryConfig(**meta["config"]),
                          program=program, params=params, packed=packed,

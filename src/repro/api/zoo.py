@@ -1,10 +1,19 @@
-"""The paper's benchmark CNNs as ``NetworkBuilder`` programs.
+"""The paper's benchmark CNNs — plus sequence models — as builder programs.
 
-These produce layer-by-layer *identical* ``LayerSpec`` lists to the
+The CNNs produce layer-by-layer *identical* ``LayerSpec`` lists to the
 historical handwritten lists in ``core/workload.py`` (same names, same
 shapes, same residual/branch wiring), so the simulator, scheduler, and
 compiled-program paths see exactly the graphs the paper §IV evaluates.
-``core.workload.WORKLOADS`` is now a thin compat shim over this module.
+``core.workload.WORKLOADS`` is a deprecated compat shim over this
+module.
+
+``vit_tiny`` opens the transformer workload class (DESIGN.md §9): a
+patchify conv, ``depth`` post-norm encoder blocks (attention + MLP,
+each ``x = LN(x + f(x))``), and a mean-pooled classifier head — every
+block built from the sequence ops the crossbar program stack lowers
+(attention expands into dynamic-operand GEMM stages).  The default is a
+CI-scale reduction (2 blocks of the ViT-Tiny geometry: dim 192, 3
+heads, MLP ratio 4); pass ``depth=12`` for the full-size model.
 """
 
 from __future__ import annotations
@@ -76,8 +85,45 @@ def resnet18_graph() -> NetworkGraph:
     return nb.build()
 
 
+def vit_tiny_graph(depth: int = 2, dim: int = 192, heads: int = 3,
+                   mlp_ratio: int = 4, patch: int = 4, input_hw: int = 32,
+                   input_ch: int = 3, classes: int = 10) -> NetworkGraph:
+    """Patchify conv + ``depth`` post-norm encoder blocks + pooled head.
+
+    CIFAR-scale ViT: a ``patch x patch`` stride-``patch`` conv rasterizes
+    the image into ``(input_hw/patch)^2`` tokens of dim ``dim``; each
+    encoder block is ``x = LN(x + MHA(x)); x = LN(x + MLP(x))``
+    (post-norm, so both normalizations are FB post-ops of their
+    residual's GEMM stage); the head mean-pools the tokens and
+    classifies.  Attention lowers into the dynamic-operand GEMM stages
+    of DESIGN.md §9.
+    """
+    nb = NetworkBuilder("vit_tiny", input_hw=input_hw, input_ch=input_ch)
+    if input_hw % patch:
+        raise ValueError(f"vit_tiny: patch {patch} does not tile "
+                         f"{input_hw}x{input_hw}")
+    entry = nb.conv(dim, k=patch, stride=patch, padding=0, name="patch")
+    for i in range(depth):
+        nb.attention(heads, name=f"b{i}_attn")
+        nb.residual(entry, name=f"b{i}_res1")
+        r1 = nb.layernorm(name=f"b{i}_ln1")
+        nb.linear(dim * mlp_ratio, name=f"b{i}_fc1")
+        nb.gelu(name=f"b{i}_gelu")
+        nb.linear(dim, name=f"b{i}_fc2")
+        nb.residual(r1, name=f"b{i}_res2")
+        entry = nb.layernorm(name=f"b{i}_ln2")
+    nb.seqpool(name="pool")
+    nb.fc(classes, name="head")
+    nb.softmax(name="softmax")
+    return nb.build()
+
+
+vit_tiny = vit_tiny_graph
+
+
 GRAPHS = {
     "alexnet": alexnet_graph,
     "vgg16": vgg16_graph,
     "resnet18": resnet18_graph,
+    "vit_tiny": vit_tiny_graph,
 }

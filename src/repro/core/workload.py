@@ -4,22 +4,41 @@
 consumer reads (simulator, baselines, program compiler).  Networks are
 *authored* through ``repro.api.NetworkBuilder`` (shape inference +
 build-time validation); the three paper CNNs live in ``repro.api.zoo``
-as builder programs, and the ``WORKLOADS`` registry below is a thin
-compat shim over them.  Shapes follow the common CIFAR-10 variants of
-AlexNet / VGG-16 / ResNet-18 used by PUMAsim-style evaluations;
-BatchNorm is folded into the preceding conv for inference.
+as builder programs, and the ``WORKLOADS`` registry below is a
+deprecated compat shim over them.  Shapes follow the common CIFAR-10
+variants of AlexNet / VGG-16 / ResNet-18 used by PUMAsim-style
+evaluations; BatchNorm is folded into the preceding conv for inference.
+
+Two layer vocabularies share this record:
+
+* **CNN kinds** — ``conv | fc | relu | maxpool | avgpool | residual |
+  softmax`` (the paper's workloads, §IV).
+* **Sequence kinds** — ``linear | attention | layernorm | gelu |
+  seqpool``: transformer encoder layers over ``(T, D)`` token buffers.
+  ``linear`` is the sequence GEMM (last-dim contraction, tokens fold
+  into the GEMM M axis), ``attention`` is one multi-head self-attention
+  layer (``heads`` heads over ``features_in`` channels — the compiler
+  expands it into qkv/scores/context/projection stages), ``layernorm``
+  / ``gelu`` are FB post-ops, and ``seqpool`` mean-pools the token axis
+  into a flat feature vector (the classifier-head transition).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Iterator
+
+# kinds that head a GEMM group (own weights / mounts on the array)
+GEMM_KINDS = ("conv", "fc", "linear", "attention")
+# kinds that only appear in sequence (transformer) graphs
+SEQ_KINDS = ("linear", "attention", "layernorm", "gelu", "seqpool")
 
 
 @dataclasses.dataclass(frozen=True)
 class LayerSpec:
     name: str
-    kind: str                  # conv|fc|relu|maxpool|avgpool|residual|softmax
+    kind: str                  # one of GEMM_KINDS or a post-op kind
     in_ch: int = 0
     out_ch: int = 0
     ksize: int = 1
@@ -27,18 +46,19 @@ class LayerSpec:
     padding: int = 0
     in_hw: int = 0             # input spatial extent (square)
     out_hw: int = 0
-    features_in: int = 0       # fc
+    features_in: int = 0       # fc / linear / attention model dim
     features_out: int = 0
     residual_from: str = ""    # layer whose OUTPUT is the residual addend
     input_from: str = ""       # layer whose output this one consumes
                                # ("" = the immediately preceding layer)
+    heads: int = 0             # attention only
 
     # -- workload numbers used by mapping/cycle models ----------------------
     @property
     def gemm_rows(self) -> int:            # im2col K
         if self.kind == "conv":
             return self.in_ch * self.ksize * self.ksize
-        if self.kind == "fc":
+        if self.kind in ("fc", "linear", "attention"):
             return self.features_in
         return 0
 
@@ -46,7 +66,7 @@ class LayerSpec:
     def gemm_cols_logical(self) -> int:    # N (before bit-plane expansion)
         if self.kind == "conv":
             return self.out_ch
-        if self.kind == "fc":
+        if self.kind in ("fc", "linear", "attention"):
             return self.features_out
         return 0
 
@@ -54,24 +74,26 @@ class LayerSpec:
     def n_vectors(self) -> int:            # GEMM passes (im2col columns)
         if self.kind == "conv":
             return self.out_hw * self.out_hw
-        if self.kind == "fc":
+        if self.kind in ("fc", "linear", "attention"):
             return 1
         return 0
 
     @property
     def n_elements(self) -> int:           # elementwise op count
         if self.kind in ("relu", "residual"):
-            return self.out_ch * self.out_hw * self.out_hw
+            return (self.out_ch * self.out_hw * self.out_hw
+                    or self.features_out)
         if self.kind in ("maxpool", "avgpool"):
             return self.out_ch * self.out_hw * self.out_hw  # windows
-        if self.kind == "softmax":
+        if self.kind in ("softmax", "layernorm", "gelu", "seqpool"):
             return self.features_out
         return 0
 
     @property
     def out_bytes(self) -> int:
         if self.kind in ("conv", "relu", "maxpool", "avgpool", "residual"):
-            return self.out_ch * self.out_hw * self.out_hw
+            return (self.out_ch * self.out_hw * self.out_hw
+                    or self.features_out)
         return self.features_out
 
 
@@ -94,32 +116,60 @@ def resnet18_cifar() -> list[LayerSpec]:
     return list(resnet18_graph().layers)
 
 
-WORKLOADS = {
+class _WorkloadShim(dict):
+    """Deprecated registry: warns and forwards to ``repro.api.zoo``.
+
+    Kept so historical call sites (``WORKLOADS["alexnet"]()``) keep
+    returning the layer-identical specs, but every lookup points users
+    at the authoring surface that replaced it.
+    """
+
+    def __getitem__(self, net):
+        warnings.warn(
+            "core.workload.WORKLOADS is deprecated; author networks with "
+            "repro.api.NetworkBuilder and use the repro.api.zoo registry "
+            "(api.zoo.GRAPHS / api.compile(name)) instead",
+            DeprecationWarning, stacklevel=2)
+        return super().__getitem__(net)
+
+
+WORKLOADS = _WorkloadShim({
     "alexnet": alexnet_cifar,
     "vgg16": vgg16_cifar,
     "resnet18": resnet18_cifar,
-}
+})
 
 
 # canonical FB chain order inside one fused group (gemm implicit first):
-# residual -> relu -> pool -> softmax (paper Fig 4a merges res under
-# conv, §II-C2 merges ReLU into max pool, softmax consumes the fc head).
-# Shared by the program compiler and the api builder's build-time check.
-POST_RANK = {"residual": 0, "relu": 1, "maxpool": 2, "avgpool": 2,
-             "softmax": 3}
+# residual -> relu|gelu -> pool -> layernorm -> seqpool -> softmax.
+# The CNN subset (paper Fig 4a merges res under conv, §II-C2 merges ReLU
+# into max pool, softmax consumes the fc head) keeps its historical
+# order; the sequence kinds slot in where post-norm transformer blocks
+# produce them (residual -> layernorm, linear -> gelu, final block ->
+# seqpool).  Activations share a rank (they never chain), and spatial
+# pools can never precede a layernorm because pools are spatial-only
+# while layernorm is sequence-only.  Shared by the program compiler and
+# the api builder's build-time check.
+POST_RANK = {"residual": 0, "relu": 1, "gelu": 1, "maxpool": 2,
+             "avgpool": 2, "layernorm": 3, "seqpool": 4, "softmax": 5}
 
 
-def input_spec(layers: list[LayerSpec]) -> tuple[int, int, int]:
-    """``(in_hw, in_ch, in_features)`` read off the first (GEMM) layer.
+def input_spec(layers: list[LayerSpec]) -> tuple[int, int, int, int]:
+    """``(in_hw, in_ch, in_features, in_seq)`` read off the first layer.
 
     The single derivation of a network's input signature — consumed by
     ``NetworkGraph.from_layers`` and ``compile_network`` so serving
-    warmup and graph input shapes can never disagree.
+    warmup and graph input shapes can never disagree.  ``in_seq`` is the
+    model dim of a sequence-input net (``(B, T, in_seq)`` batches, T
+    picked at run time); conv-first nets set ``in_hw``/``in_ch`` and
+    fc-first nets set ``in_features`` exactly as before.
     """
     head = layers[0]
     if head.kind == "conv":
-        return head.in_hw, head.in_ch, 0
-    return 0, 0, head.features_in
+        return head.in_hw, head.in_ch, 0, 0
+    if head.kind in ("linear", "attention"):
+        return 0, 0, 0, head.features_in
+    return 0, 0, head.features_in, 0
 
 
 def layer_groups(layers: list[LayerSpec]) -> Iterator[list[LayerSpec]]:
@@ -127,13 +177,13 @@ def layer_groups(layers: list[LayerSpec]) -> Iterator[list[LayerSpec]]:
 
     One group becomes one FB chain inside one (set of) array(s) — the unit
     HURRY schedules (conv + res + relu + pool fused; §III-A).  A non-GEMM
-    layer before any conv/fc has no group head to attach to — that is a
+    layer before any GEMM head has no group to attach to — that is a
     malformed network, rejected here (and earlier, with the same message,
     by ``repro.api.NetworkBuilder`` at graph-build time).
     """
     group: list[LayerSpec] = []
     for l in layers:
-        if l.kind in ("conv", "fc"):
+        if l.kind in GEMM_KINDS:
             if group:
                 yield group
             group = [l]
@@ -141,8 +191,8 @@ def layer_groups(layers: list[LayerSpec]) -> Iterator[list[LayerSpec]]:
             if not group:
                 raise ValueError(
                     f"layer {l.name!r} ({l.kind}) precedes any GEMM layer; "
-                    "every relu/pool/residual/softmax must follow a conv "
-                    "or fc group head")
+                    "every post-op must follow a GEMM group head (conv/fc, "
+                    "or linear/attention for sequence chains)")
             group.append(l)
     if group:
         yield group

@@ -9,29 +9,49 @@ round-trips through a separate jnp op.  This extends
 `fused_gemm_epilogue.py` (which fuses fp GEMM + activation) to the
 crossbar's int32 -> f32 dequant chain and to window reductions.
 
-Op order is the canonical FB chain order (the only order the paper's
-workloads produce, validated by the program compiler):
+The sequence workload class (DESIGN.md §9) adds three FB ops on top of
+the CNN chain: **GELU** (a LUT activation like the softmax exp), **layer
+norm** (mean/variance row statistics in the SnA datapath, then a scale
+and shift — the transformer analogue of the shift-and-add requant), and
+**seq-mean pooling** (the classifier-head token reduction, a 1-D window
+average over one sequence's rows).  A static ``post_scale`` factor
+multiplies the dequantized tile before the activation — attention
+programs fold `1/sqrt(head_dim)` into the scores stage there, keeping
+the float op order identical to the functional oracle's
+``softmax(scores * sm_scale)``.
 
-    dequant (SnA scale) -> + bias -> + residual -> ReLU
-        -> max/avg pool window  OR  softmax
+Op order is the canonical FB chain order (the only order the paper's /
+transformer workloads produce, validated by the program compiler):
+
+    dequant (SnA scale) -> + bias -> + residual -> [* post_scale]
+        -> ReLU | GELU -> layer norm
+        -> max/avg pool window | seq-mean  OR  softmax
+
+The numeric bodies of the non-trivial FB ops (``gelu``,
+``layer_norm_rows``, ``softmax_rows``) are module-level jnp functions so
+the functional oracle (`api/graph.py::NetworkGraph.forward`) evaluates
+the *same expression tree* — bit-identical under jit (DESIGN.md §5).
 
 Pooling layout: rows of the (M, N) GEMM output are im2col vectors in
 (image, row, col) order, so one grid step owns one image's ``ih*ih`` rows
 and reduces ``window x window`` blocks via a leading-axis reshape — the
 column-parallel window tiling of Fig 5c.  Only ``stride == window``
 (non-overlapping) pooling is supported, which covers the paper's
-workloads (2x2/2 max pool, 4x4/4 global avg pool).  Softmax needs the
-full feature axis in-tile, so ``block_n`` is forced to N in that mode.
+workloads (2x2/2 max pool, 4x4/4 global avg pool).  ``seqmean`` treats
+``window`` as the token count: one grid step owns one sequence's rows
+and mean-reduces them to a single output row.  Softmax and layer norm
+need the full feature axis in-tile, so ``block_n`` is forced to N in
+those modes.
 
 Block activation is pad-to-block: when (M, N) do not divide the
 (clamped) block sizes, operands are zero-padded up to the block
 multiple, full-size tiles run, and the result is sliced back — every
 row/column is processed independently by the FB chain, so the padding
-is slice-exact and callers never tune divisor blocks.  The two
-structural constraints remain: pooling fixes M to ``B * img_hw^2``
-(images are never padded here), and softmax needs the full feature
-axis in-tile (``block_n = N``, never padded).  On TPU proper,
-multiples of (8, 128) pick the fast path.
+is slice-exact and callers never tune divisor blocks.  The structural
+constraints remain: pooling fixes M to ``B * img_hw^2`` (or ``B * T``
+for seqmean — rows are never padded there), and softmax / layer norm
+need the full feature axis in-tile (``block_n = N``, never padded).  On
+TPU proper, multiples of (8, 128) pick the fast path.
 """
 
 from __future__ import annotations
@@ -42,56 +62,118 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+_GELU_C = 0.7978845608028654          # sqrt(2/pi)
+LN_EPS = 1e-5
 
-def _kernel(y_ref, scale_ref, b_ref, res_ref, o_ref, *, act: str, pool: str,
-            window: int, img_hw: int, softmax: bool, has_residual: bool):
+
+def gelu(x: jnp.ndarray) -> jnp.ndarray:
+    """Tanh-approximated GELU — the LUT-friendly form HURRY's exp/log
+    block evaluates.  Shared by the kernel and the functional oracle so
+    both sides trace the identical expression (DESIGN.md §5)."""
+    return 0.5 * x * (1.0 + jnp.tanh(_GELU_C * (x + 0.044715 * x * x * x)))
+
+
+def layer_norm_rows(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
+                    eps: float = LN_EPS) -> jnp.ndarray:
+    """Per-row layer norm over the last axis, then scale and shift.
+
+    Mean/variance are the row statistics the SnA datapath accumulates;
+    the affine tail is the same multiply-add shape as the requant FB.
+    Shared kernel/oracle expression (DESIGN.md §5).
+    """
+    m = jnp.mean(x, axis=-1, keepdims=True)
+    d = x - m
+    v = jnp.mean(d * d, axis=-1, keepdims=True)
+    return d / jnp.sqrt(v + eps) * gamma + beta
+
+
+def softmax_rows(x: jnp.ndarray) -> jnp.ndarray:
+    """Max-subtracted per-row softmax (paper Eq. 1's stabilization).
+
+    Structurally identical to ``jax.nn.softmax`` so either spelling
+    compiles to the same HLO; the oracle's attention path uses this one
+    to make the sharing explicit.
+    """
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def _kernel(y_ref, scale_ref, b_ref, res_ref, g_ref, bt_ref, o_ref, *,
+            act: str, pool: str, window: int, img_hw: int, softmax: bool,
+            norm: str, post_scale: float, has_residual: bool):
     y = (y_ref[...].astype(jnp.float32) * scale_ref[0, 0]
          + b_ref[...].astype(jnp.float32))
     if has_residual:
         y = y + res_ref[...].astype(jnp.float32)
+    if post_scale:
+        y = y * post_scale
     if act == "relu":
         y = jnp.maximum(y, 0.0)
-    if pool != "none":
+    elif act == "gelu":
+        y = gelu(y)
+    if norm == "layer":
+        y = layer_norm_rows(y, g_ref[...].astype(jnp.float32),
+                            bt_ref[...].astype(jnp.float32))
+    if pool == "seqmean":
+        y = jnp.mean(y, axis=0, keepdims=True)
+    elif pool != "none":
         oh = img_hw // window
         bn = y.shape[-1]
         y = y.reshape(oh, window, oh, window, bn)
         y = jnp.max(y, axis=(1, 3)) if pool == "max" else jnp.mean(y, axis=(1, 3))
         y = y.reshape(oh * oh, bn)
     if softmax:
-        m = jnp.max(y, axis=-1, keepdims=True)
-        e = jnp.exp(y - m)
-        y = e / jnp.sum(e, axis=-1, keepdims=True)
+        y = softmax_rows(y)
     o_ref[...] = y
 
 
 @functools.partial(jax.jit, static_argnames=("act", "pool", "window",
-                                             "img_hw", "softmax", "block_m",
+                                             "img_hw", "softmax", "norm",
+                                             "post_scale", "block_m",
                                              "block_n", "interpret"))
 def fb_epilogue(y: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
                 residual: jnp.ndarray | None = None, *, act: str = "none",
                 pool: str = "none", window: int = 0, img_hw: int = 0,
-                softmax: bool = False, block_m: int = 256,
-                block_n: int = 128, interpret: bool = False) -> jnp.ndarray:
+                softmax: bool = False, norm: str = "none",
+                gamma: jnp.ndarray | None = None,
+                beta: jnp.ndarray | None = None, post_scale: float = 0.0,
+                block_m: int = 256, block_n: int = 128,
+                interpret: bool = False) -> jnp.ndarray:
     """y (M, N) int32 crossbar output -> fused FB chain -> f32.
 
     ``scale`` is the (1, 1) f32 shift-and-add requant factor (input scale
-    x weight scale); ``bias`` is (N,).  ``act`` in {"none", "relu"};
-    ``pool`` in {"none", "max", "avg"} with ``window == stride`` over an
-    ``img_hw x img_hw`` spatial grid per image (M = B * img_hw^2); pool
-    output is (B * (img_hw//window)^2, N).  ``softmax=True`` (exclusive
-    with pool) normalizes over the full feature axis -> (M, N).
+    x weight scale); ``bias`` is (N,).  ``act`` in {"none", "relu",
+    "gelu"}; ``pool`` in {"none", "max", "avg", "seqmean"} — max/avg use
+    ``window == stride`` over an ``img_hw x img_hw`` spatial grid per
+    image (M = B * img_hw^2, output (B * (img_hw//window)^2, N));
+    ``seqmean`` mean-reduces each sequence's ``window`` token rows
+    (M = B * window, output (B, N)).  ``norm="layer"`` applies
+    ``layer_norm_rows`` with ``gamma``/``beta`` (N,) after the
+    activation.  ``post_scale`` (static) multiplies the dequantized tile
+    before the activation — attention scores fold `1/sqrt(hd)` here.
+    ``softmax=True`` (exclusive with pool) normalizes over the full
+    feature axis -> (M, N).
     """
     M, N = y.shape
     assert scale.shape == (1, 1) and bias.shape == (N,)
-    assert act in ("none", "relu") and pool in ("none", "max", "avg")
+    assert act in ("none", "relu", "gelu")
+    assert pool in ("none", "max", "avg", "seqmean")
+    assert norm in ("none", "layer")
     has_residual = residual is not None
     res = residual if has_residual else jnp.zeros((1, 1), jnp.float32)
+    has_norm = norm == "layer"
+    if has_norm:
+        assert gamma is not None and beta is not None
+        assert gamma.shape == (N,) and beta.shape == (N,)
+    g = gamma if has_norm else jnp.zeros((1,), jnp.float32)
+    bt = beta if has_norm else jnp.zeros((1,), jnp.float32)
 
     # pad-to-block activation (module docstring): pad rows unless pooling
-    # fixes the image structure, pad cols unless softmax spans the full
-    # feature axis; run full tiles, slice back.
-    if softmax:
-        block_n = N              # the tournament needs every logit in-tile
+    # fixes the image/sequence structure, pad cols unless softmax or
+    # layer norm span the full feature axis; run full tiles, slice back.
+    if softmax or has_norm:
+        block_n = N              # the row reduction needs every column
     block_n = min(block_n, N)
     pm = 0 if pool != "none" else -M % min(block_m, M)
     pn = -N % block_n
@@ -102,7 +184,15 @@ def fb_epilogue(y: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
             res = jnp.pad(res, ((0, pm), (0, pn)))
     Mp, Np = M + pm, N + pn
 
-    if pool != "none":
+    if pool == "seqmean":
+        assert not softmax, "pool and softmax FBs never chain directly"
+        assert window >= 1 and M % window == 0, (M, window)
+        n_seq = M // window
+        grid = (n_seq, Np // block_n)
+        row_spec = pl.BlockSpec((window, block_n), lambda i, j: (i, j))
+        out_spec = pl.BlockSpec((1, block_n), lambda i, j: (i, j))
+        out_shape = jax.ShapeDtypeStruct((n_seq, Np), jnp.float32)
+    elif pool != "none":
         assert not softmax, "pool and softmax FBs never chain directly"
         assert window > 1 and img_hw % window == 0, (img_hw, window)
         img_rows = img_hw * img_hw
@@ -122,8 +212,11 @@ def fb_epilogue(y: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
 
     res_spec = (row_spec if has_residual
                 else pl.BlockSpec((1, 1), lambda i, j: (0, 0)))
+    col_spec = (pl.BlockSpec((block_n,), lambda i, j: (j,)) if has_norm
+                else pl.BlockSpec((1,), lambda i, j: (0,)))
     kernel = functools.partial(_kernel, act=act, pool=pool, window=window,
-                               img_hw=img_hw, softmax=softmax,
+                               img_hw=img_hw, softmax=softmax, norm=norm,
+                               post_scale=post_scale,
                                has_residual=has_residual)
     out = pl.pallas_call(
         kernel,
@@ -133,11 +226,13 @@ def fb_epilogue(y: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
             pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
             pl.BlockSpec((block_n,), lambda i, j: (j,)),
             res_spec,
+            col_spec,
+            col_spec,
         ],
         out_specs=out_spec,
         out_shape=out_shape,
         interpret=interpret,
-    )(y, scale, bias, res)
+    )(y, scale, bias, res, g, bt)
     if pn:
         out = out[:, :N]
     if pm:                       # never set in pool mode (out rows differ)

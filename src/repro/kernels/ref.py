@@ -107,21 +107,42 @@ def fused_gemm_epilogue_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
 def fb_epilogue_ref(y: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
                     residual: jnp.ndarray | None = None, *,
                     act: str = "none", pool: str = "none", window: int = 0,
-                    img_hw: int = 0, softmax: bool = False) -> jnp.ndarray:
+                    img_hw: int = 0, softmax: bool = False,
+                    norm: str = "none", gamma: jnp.ndarray | None = None,
+                    beta: jnp.ndarray | None = None,
+                    post_scale: float = 0.0) -> jnp.ndarray:
     """The unfused jnp composition the fb_epilogue kernel must equal:
-    dequant -> +bias -> +residual -> ReLU -> pool window | softmax,
-    written with the same ops the functional CNN forward uses
-    (``reduce_window`` max pool, window-mean avg pool, jax.nn.softmax).
+    dequant -> +bias -> +residual -> [* post_scale] -> ReLU|GELU ->
+    layer norm -> pool window | seq-mean | softmax, written with the
+    same ops the functional forwards use (``reduce_window`` max pool,
+    window-mean avg pool, jax.nn.softmax / jax.nn.gelu).
     """
     M, N = y.shape
     out = y.astype(jnp.float32) * scale.reshape(()) + bias.astype(jnp.float32)
     if residual is not None:
         out = out + residual.astype(jnp.float32)
+    if post_scale:
+        out = out * post_scale
     if act == "relu":
         out = jax.nn.relu(out)
+    elif act == "gelu":
+        # the tanh-GELU *formula* is the shared definition (fb_epilogue
+        # module docstring) — jax.nn.gelu orders the multiply/cube
+        # differently, which is 1 ulp away under jit
+        from repro.kernels.fb_epilogue import gelu
+        out = gelu(out)
     elif act != "none":
         raise ValueError(act)
-    if pool != "none":
+    if norm == "layer":
+        mu = out.mean(axis=-1, keepdims=True)
+        var = ((out - mu) ** 2).mean(axis=-1, keepdims=True)
+        out = ((out - mu) / jnp.sqrt(var + 1e-5)
+               * gamma.astype(jnp.float32) + beta.astype(jnp.float32))
+    elif norm != "none":
+        raise ValueError(norm)
+    if pool == "seqmean":
+        out = out.reshape(M // window, window, N).mean(axis=1)
+    elif pool != "none":
         b = M // (img_hw * img_hw)
         x4 = out.reshape(b, img_hw, img_hw, N)
         if pool == "max":

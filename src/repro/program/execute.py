@@ -6,7 +6,7 @@ scheduled program is *the* thing that computes:
 * weights are chip-resident: ``pack.pack_program`` pre-quantizes, lays
   out, and K-pads every stage's weight matrix ONCE (the numeric
   analogue of programming conductances), so the hot loop only
-  quantizes the *input* — the single data-dependent quantity;
+  quantizes *activations* — the data-dependent quantities;
 * every GEMM is ONE ``crossbar_gemm`` Pallas dispatch: the kernel's K
   grid activates all row mounts of the stage in a single call
   (``rows=tile_rows`` — each K block is one physical array read with
@@ -15,25 +15,35 @@ scheduled program is *the* thing that computes:
   to the former per-mount ``lax.scan`` because int32 addition is
   associative);
 * every post-op chain (shift-and-add requant -> bias -> residual ->
-  ReLU -> max/avg pool window | softmax) runs in ONE pass of the fused
-  ``fb_epilogue`` Pallas kernel over the GEMM output tile, so the
-  crossbar output never round-trips through a separate jnp op — the
-  numeric analogue of HURRY hiding FB post-ops inside the array.
+  ReLU/GELU -> layer norm -> max/avg/seq-mean pool window | softmax)
+  runs in ONE pass of the fused ``fb_epilogue`` Pallas kernel over the
+  GEMM output tile, so the crossbar output never round-trips through a
+  separate jnp op — the numeric analogue of HURRY hiding FB post-ops
+  inside the array.
 
-Both kernels pad-to-block internally (full-size tiles, slice-exact), so
-the executor passes the configured block sizes straight through instead
-of shrinking them to divisors of odd M/N.
+**Dynamic-operand stages** (``kind="dyn_gemm"``, DESIGN.md §9) extend
+the same machinery to attention's activation-side GEMMs: per (batch,
+head), the Q·Kᵀ / P·V right-hand operand is quantized and mounted
+IN-GRAPH with the same ``plane_pack`` helper that mounts weights at
+compile time, then dispatched through the same ``crossbar_gemm`` kernel
+with the K grid sized to the *runtime* contraction length (head dim for
+scores, seq_len for context — the paper's block-activation scheme on
+dynamically sized mounts).  The per-mount loop is a ``jax.vmap`` over
+the (batch*heads) axis — mirroring the functional oracle's vmapped
+``mm`` exactly, so per-slice quantization statistics line up and the
+clip-free bit-exactness argument of §5 carries over unchanged.
 
 Intermediate buffers are dropped as soon as no later stage reads them
-(``src`` or ``res_src``), so an eager forward holds the live frontier
-of the dataflow graph, not every activation of the network.
+(``src``, ``dyn_src`` or ``res_src``), so an eager forward holds the
+live frontier of the dataflow graph, not every activation.
 
 Quantization mirrors ``core/crossbar.crossbar_linear`` exactly
-(per-tensor symmetric int8 of the full im2col matrix and weight
-matrix), so under a clip-free config the program forward is
-bit-identical to the functional-model forward when both are jitted
-(identical FMA contraction; DESIGN.md §5).  Read noise is a
-functional-model-only experiment: the program path models a clean chip.
+(per-tensor symmetric int8 of the full im2col/token matrix and weight
+matrix; per-(batch, head) tensors for dynamic stages), so under a
+clip-free config the program forward is bit-identical to the
+functional-model forward when both are jitted (identical FMA
+contraction; DESIGN.md §5).  Read noise is a functional-model-only
+experiment: the program path models a clean chip.
 
 ``execute_packed`` is trace-pure; wrap it in ``jax.jit`` with the
 program closed over (see ``serve.ProgramServer``) to compile once and
@@ -52,8 +62,9 @@ from repro.kernels.crossbar_gemm import crossbar_gemm
 from repro.kernels.fb_epilogue import fb_epilogue
 from repro.kernels.ops import interpret_default
 
-from .compile import CrossbarProgram
-from .pack import PackedProgram, pack_program
+from .compile import CrossbarProgram, ProgramOp
+from .pack import PackedProgram, PackedStage, pack_program, plane_pack
+from .sequence import merge_heads, split_qkv_heads, tokens
 
 
 def im2col(x: jnp.ndarray, k: int, stride: int, pad: int) -> jnp.ndarray:
@@ -72,23 +83,145 @@ def _last_reads(stages) -> dict[str, int]:
     last: dict[str, int] = {}
     for si, (gemm, posts) in enumerate(stages):
         last[gemm.src] = si
+        if gemm.dyn_src:
+            last[gemm.dyn_src] = si
         for op in posts:
             if op.kind == "residual":
                 last[op.res_src] = si
     return last
 
 
+def _dyn_stage(gemm: ProgramOp, posts: list[ProgramOp], bufs: dict,
+               cfg, *, block_m: int, block_n: int,
+               interpret: bool) -> jnp.ndarray:
+    """One dynamic-operand GEMM stage (attention Q·Kᵀ or P·V).
+
+    Mounts the right-hand activation per (batch, head) with
+    ``plane_pack`` — the same helper that mounts weights at compile
+    time — and dispatches the same ``crossbar_gemm`` kernel, its K grid
+    sized to the runtime contraction length (module docstring).
+    """
+    if gemm.dyn == "qk":
+        q, k, _ = split_qkv_heads(tokens(bufs[gemm.src]), gemm.heads)
+        a, w = q, jnp.swapaxes(k, 1, 2)          # (BH, T, hd), (BH, hd, T)
+    elif gemm.dyn == "pv":
+        a = bufs[gemm.src]                       # (BH, T, T) probabilities
+        _, _, w = split_qkv_heads(tokens(bufs[gemm.dyn_src]), gemm.heads)
+    else:  # pragma: no cover - compile_network emits only qk/pv
+        raise ValueError(gemm.dyn)
+    softmax = any(p.kind == "softmax" for p in posts)
+    rows = min(gemm.tile_rows, a.shape[-1])      # dynamic mount height
+
+    def one(a2, w2):
+        aq, ascale = quantize_symmetric(a2, cfg.input_bits)
+        w8, wamax = plane_pack(w2, tile_rows=rows,
+                               weight_bits=cfg.weight_bits)
+        a8 = aq.astype(jnp.int8)
+        kp = w8.shape[0] - a8.shape[1]
+        if kp:   # mirror the mount padding on the streaming side
+            a8 = jnp.pad(a8, ((0, 0), (0, kp)))
+        y = crossbar_gemm(a8, w8, adc_bits=cfg.adc_bits, rows=rows,
+                          block_m=block_m, block_n=block_n,
+                          interpret=interpret)
+        ws = quantize_scale(wamax, cfg.weight_bits)
+        scale = (ascale * ws).astype(jnp.float32).reshape(1, 1)
+        return fb_epilogue(y, scale, jnp.zeros((w2.shape[1],), jnp.float32),
+                           None, softmax=softmax,
+                           post_scale=gemm.post_scale, block_m=block_m,
+                           block_n=block_n, interpret=interpret)
+
+    out = jax.vmap(one)(a, w)
+    if gemm.dyn == "pv":                         # heads rejoin the model dim
+        out = merge_heads(out, gemm.heads)
+    return out
+
+
+def _static_stage(gemm: ProgramOp, posts: list[ProgramOp],
+                  st: PackedStage, bufs: dict, cfg, *, block_m: int,
+                  block_n: int, interpret: bool,
+                  drop_softmax: bool) -> tuple[str, jnp.ndarray]:
+    """One weight-mounted GEMM stage + fused epilogue -> (dst, buffer)."""
+    src = bufs[gemm.src]
+    b = src.shape[0]
+    t = 0
+    if gemm.is_conv:
+        cols = im2col(src, gemm.ksize, gemm.stride, gemm.padding)
+        xin = cols.reshape(-1, cols.shape[-1])
+    elif gemm.seq:
+        src = tokens(src)
+        t = src.shape[1]
+        xin = src.reshape(-1, src.shape[-1])
+    else:
+        if src.ndim == 4:
+            xin = src.reshape(b, -1)             # NHWC flatten
+        else:
+            xin = src
+
+    xq, xs = quantize_symmetric(xin, cfg.input_bits)
+    x8 = xq.astype(jnp.int8)
+    kp = st.w8.shape[0] - x8.shape[1]
+    if kp:   # K was padded to full mounts at pack time; mirror it
+        x8 = jnp.pad(x8, ((0, 0), (0, kp)))
+    y_int = crossbar_gemm(x8, st.w8, adc_bits=cfg.adc_bits,
+                          rows=gemm.tile_rows, block_m=block_m,
+                          block_n=block_n, interpret=interpret)
+    # the weight scale divides out of the stored amax IN-GRAPH so the
+    # dequant product keeps the functional reference's HLO shape
+    # (quantize_scale docstring; DESIGN.md §5)
+    ws = quantize_scale(st.w_amax, cfg.weight_bits)
+    scale = (xs * ws).astype(jnp.float32).reshape(1, 1)
+
+    act, pool, window, img_hw, norm = "none", "none", 0, 0, "none"
+    softmax, res = False, None
+    out_hw = gemm.out_hw
+    dst = posts[-1].dst if posts else gemm.dst
+    for op in posts:
+        if op.kind == "relu":
+            act = "relu"
+        elif op.kind == "gelu":
+            act = "gelu"
+        elif op.kind == "layernorm":
+            norm = "layer"
+        elif op.kind == "residual":
+            r = bufs[op.res_src]
+            res = r.reshape(-1, r.shape[-1])
+        elif op.kind in ("maxpool", "avgpool"):
+            pool = "max" if op.kind == "maxpool" else "avg"
+            window, img_hw, out_hw = op.window, op.in_hw, op.out_hw
+        elif op.kind == "seqpool":
+            pool, window = "seqmean", t
+        elif op.kind == "softmax":
+            softmax = True
+        else:  # pragma: no cover - compile_network validates kinds
+            raise ValueError(op.kind)
+    if softmax and drop_softmax:
+        softmax = False
+        dst = gemm.dst
+    out = fb_epilogue(y_int, scale, st.bias, res, act=act, pool=pool,
+                      window=window, img_hw=img_hw, softmax=softmax,
+                      norm=norm, gamma=st.ln_g, beta=st.ln_b,
+                      block_m=block_m, block_n=block_n,
+                      interpret=interpret)
+    if gemm.is_conv:
+        out = out.reshape(b, out_hw, out_hw, -1)
+    elif gemm.seq and pool != "seqmean":
+        out = out.reshape(b, t, -1)
+    return dst, out
+
+
 def execute_packed(packed: PackedProgram, x: jnp.ndarray,
                    *, block_m: int = 512, block_n: int = 512,
                    interpret: bool | None = None,
                    return_logits: bool = False) -> jnp.ndarray:
-    """Run a packed program on a batch ``x`` (B, H, W, C) float32.
+    """Run a packed program on a batch ``x`` (B, H, W, C) float32 — or
+    (B, T, D) tokens for sequence-input programs.
 
     The steady-state hot path: weights are already chip-resident int8
     mount planes (see ``pack.py``), so each stage quantizes its input,
-    makes one ``crossbar_gemm`` dispatch activating every mount, and
-    one fused ``fb_epilogue`` dispatch.  Returns the program output
-    buffer — softmax probabilities, or the pre-softmax logits with
+    makes one ``crossbar_gemm`` dispatch activating every mount (one
+    per batch*head for dynamic attention stages), and one fused
+    ``fb_epilogue`` dispatch.  Returns the program output buffer —
+    softmax probabilities, or the pre-softmax logits with
     ``return_logits=True`` (the final stage is re-fused without its
     softmax FB, mirroring the functional forward).  Block sizes are
     interpret-mode defaults; on TPU proper prefer (128, 128) MXU tiles.
@@ -102,58 +235,16 @@ def execute_packed(packed: PackedProgram, x: jnp.ndarray,
     last = _last_reads(stages)
     ret = program.logits if return_logits else program.output
     for si, ((gemm, posts), st) in enumerate(zip(stages, packed.stages)):
-        src = bufs[gemm.src]
-        if gemm.is_conv:
-            cols = im2col(src, gemm.ksize, gemm.stride, gemm.padding)
-            b, oh, ow, kk = cols.shape
-            xin = cols.reshape(-1, kk)
+        if gemm.kind == "dyn_gemm":
+            dst = posts[-1].dst if posts else gemm.dst
+            bufs[dst] = _dyn_stage(gemm, posts, bufs, cfg, block_m=block_m,
+                                   block_n=block_n, interpret=interpret)
         else:
-            if src.ndim == 4:
-                src = src.reshape(src.shape[0], -1)   # NHWC flatten
-            xin = src
-            b = src.shape[0]
-
-        xq, xs = quantize_symmetric(xin, cfg.input_bits)
-        x8 = xq.astype(jnp.int8)
-        kp = st.w8.shape[0] - x8.shape[1]
-        if kp:   # K was padded to full mounts at pack time; mirror it
-            x8 = jnp.pad(x8, ((0, 0), (0, kp)))
-        y_int = crossbar_gemm(x8, st.w8, adc_bits=cfg.adc_bits,
-                              rows=gemm.tile_rows, block_m=block_m,
-                              block_n=block_n, interpret=interpret)
-        # the weight scale divides out of the stored amax IN-GRAPH so the
-        # dequant product keeps the functional reference's HLO shape
-        # (quantize_scale docstring; DESIGN.md §5)
-        ws = quantize_scale(st.w_amax, cfg.weight_bits)
-        scale = (xs * ws).astype(jnp.float32).reshape(1, 1)
-
-        act, pool, window, img_hw = "none", "none", 0, 0
-        softmax, res = False, None
-        out_hw = gemm.out_hw
-        dst = posts[-1].dst if posts else gemm.dst
-        for op in posts:
-            if op.kind == "relu":
-                act = "relu"
-            elif op.kind == "residual":
-                r = bufs[op.res_src]
-                res = r.reshape(-1, r.shape[-1])
-            elif op.kind in ("maxpool", "avgpool"):
-                pool = "max" if op.kind == "maxpool" else "avg"
-                window, img_hw, out_hw = op.window, op.in_hw, op.out_hw
-            elif op.kind == "softmax":
-                softmax = True
-            else:  # pragma: no cover - compile_network validates kinds
-                raise ValueError(op.kind)
-        if softmax and return_logits and si == len(stages) - 1:
-            softmax = False
-            dst = gemm.dst
-        out = fb_epilogue(y_int, scale, st.bias, res, act=act, pool=pool,
-                          window=window, img_hw=img_hw, softmax=softmax,
-                          block_m=block_m, block_n=block_n,
-                          interpret=interpret)
-        if gemm.is_conv:
-            out = out.reshape(b, out_hw, out_hw, -1)
-        bufs[dst] = out
+            dst, out = _static_stage(
+                gemm, posts, st, bufs, cfg, block_m=block_m,
+                block_n=block_n, interpret=interpret,
+                drop_softmax=return_logits and si == len(stages) - 1)
+            bufs[dst] = out
         # drop buffers no later stage reads: eager forwards hold only
         # the live dataflow frontier
         for name in [n for n, li in last.items() if li <= si]:

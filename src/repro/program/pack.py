@@ -19,16 +19,27 @@ call:
   full ``tile_rows`` ADC chunk and the executor activates ALL mounts of
   a stage in one ``crossbar_gemm`` K-grid dispatch (block activation).
 
+The quantize+pad core is the standalone ``plane_pack`` helper — the
+SAME function the executor invokes **in-graph, per batch** on the
+dynamic operands of attention stages (quantized K/V head matrices,
+DESIGN.md §9): compile-time weight mounting and run-time activation
+mounting are one code path, so the exactness argument transfers
+verbatim.
+
 The result is a ``PackedProgram`` — a jax pytree whose leaves are the
-per-stage ``(w8, w_amax, bias)`` arrays and whose static treedef
-carries the (plan-free) program — that ``execute_packed`` consumes
-directly.  The hot loop then only quantizes the *input* (the single
-data-dependent quantity) and dispatches kernels; no weight touches
+per-stage ``(w8, w_amax, bias[, ln_g, ln_b])`` arrays and whose static
+treedef carries the (plan-free) program — that ``execute_packed``
+consumes directly.  Layer-norm FBs fused onto a stage carry their
+gamma/beta here too, so the packed executor never reads the float
+param pytree.  Dynamic-operand stages own no weights: they pack as
+empty placeholders (their mounts materialize per batch in the
+executor).  The hot loop then only quantizes *activations* (the
+data-dependent quantities) and dispatches kernels; no weight touches
 float math again.  Packing eagerly and quantizing under jit produce
 bit-identical planes: ``quantize_symmetric`` is abs/max/divide/round —
 none of it subject to FMA contraction (DESIGN.md §5).
 
-``repro.api`` persists the packed planes in its save format (version 2),
+``repro.api`` persists the packed planes in its save format (version 3),
 so ``api.load(...).run(...)`` never re-derives them (DESIGN.md §7).
 """
 
@@ -55,12 +66,24 @@ class PackedStage:
     K grid is exactly the stage's mount rounds; ``w_amax`` is the f32
     per-tensor ``max(|w|)`` from which the executor derives the
     symmetric quantization scale in-graph (``quantize_scale``);
-    ``bias`` the f32 per-column bias.
+    ``bias`` the f32 per-column bias.  ``ln_g``/``ln_b`` are the fused
+    layer-norm FB's gamma/beta when the stage's post chain has one
+    (``None`` otherwise).  Dynamic-operand stages are empty placeholders
+    (0-sized ``w8``): their operands mount per batch in the executor.
     """
 
     w8: jnp.ndarray
     w_amax: jnp.ndarray
     bias: jnp.ndarray
+    ln_g: jnp.ndarray | None = None
+    ln_b: jnp.ndarray | None = None
+
+
+def dyn_placeholder() -> PackedStage:
+    """The empty PackedStage of a dynamic-operand (attention) stage."""
+    return PackedStage(w8=jnp.zeros((0, 0), jnp.int8),
+                       w_amax=jnp.zeros((), jnp.float32),
+                       bias=jnp.zeros((0,), jnp.float32))
 
 
 @jax.tree_util.register_dataclass
@@ -83,18 +106,33 @@ class PackedProgram:
         return self.program.cfg
 
 
+def plane_pack(w: jnp.ndarray, *, tile_rows: int,
+               weight_bits: int = 8) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Mount a (K, N) float matrix: -> (int8 planes (K_pad, N), f32 amax).
+
+    Symmetric per-tensor int8 quantization at ``weight_bits``, K
+    zero-padded up to the next ``tile_rows`` multiple so every mount is
+    a full ADC row chunk (zero rows add nothing to any bitline count).
+    Invoked once per weight at pack time — and **in-graph, per batch**
+    on the quantized K/V head matrices of dynamic attention stages, the
+    run-time analogue of programming conductances (DESIGN.md §9).  The
+    ``amax`` statistic (not the scale) is returned so every consumer
+    derives the scale through ``quantize_scale``'s traced expression.
+    """
+    wq, _ = quantize_symmetric(w, weight_bits)
+    kp = -w.shape[0] % tile_rows
+    if kp:
+        wq = jnp.pad(wq, ((0, kp), (0, 0)))
+    return wq.astype(jnp.int8), jnp.max(jnp.abs(w)).astype(jnp.float32)
+
+
 def pack_weight(w: jnp.ndarray, *, is_conv: bool, tile_rows: int,
                 weight_bits: int) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Float weight -> (int8 mount planes (K_pad, N), f32 amax)."""
     if is_conv:                 # (k, k, in_ch, out_ch) -> (in_ch*k*k, N)
         kk = w.shape[0] * w.shape[1] * w.shape[2]
         w = w.transpose(2, 0, 1, 3).reshape(kk, -1)
-    wq, _ = quantize_symmetric(w, weight_bits)
-    K = w.shape[0]
-    kp = -K % tile_rows         # zero rows add nothing to any bitline count
-    if kp:
-        wq = jnp.pad(wq, ((0, kp), (0, 0)))
-    return wq.astype(jnp.int8), jnp.max(jnp.abs(w)).astype(jnp.float32)
+    return plane_pack(w, tile_rows=tile_rows, weight_bits=weight_bits)
 
 
 @functools.partial(jax.jit, static_argnums=(0,))
@@ -112,12 +150,20 @@ def pack_program(program: CrossbarProgram, params: dict) -> PackedProgram:
     """
     cfg = program.cfg
     stages = []
-    for gemm, _ in program.stages():
+    for gemm, posts in program.stages():
+        if gemm.kind == "dyn_gemm":
+            stages.append(dyn_placeholder())
+            continue
         p = params[gemm.param]
-        w8, amax = pack_weight(p["w"], is_conv=gemm.is_conv,
+        w8, amax = pack_weight(p[gemm.w_key], is_conv=gemm.is_conv,
                                tile_rows=gemm.tile_rows,
                                weight_bits=cfg.weight_bits)
-        stages.append(PackedStage(w8=w8, w_amax=amax,
-                                  bias=p["b"].astype(jnp.float32)))
+        ln = next((o for o in posts if o.kind == "layernorm"), None)
+        lp = params[ln.param] if ln is not None else None
+        stages.append(PackedStage(
+            w8=w8, w_amax=amax,
+            bias=p[gemm.b_key].astype(jnp.float32),
+            ln_g=None if lp is None else lp["g"].astype(jnp.float32),
+            ln_b=None if lp is None else lp["b"].astype(jnp.float32)))
     return PackedProgram(stages=tuple(stages),
                          program=dataclasses.replace(program, plans=()))
